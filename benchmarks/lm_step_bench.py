@@ -1,0 +1,58 @@
+"""LM substrate benchmark: smoke-scale train and decode step times for every
+assigned architecture (CPU wall-clock; the full-scale numbers are the
+dry-run roofline terms in benchmarks/results/)."""
+import sys, os, time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import ShapeCell
+from repro.data.pipeline import DataConfig, make_batch
+from repro.models import lm
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.trainer import make_train_step
+
+CELL = ShapeCell("bench", seq_len=64, global_batch=4, kind="train")
+
+
+def _time(fn, reps=5):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> list[str]:
+    out = ["arch,train_us_per_call,decode_us_per_call"]
+    key = jax.random.PRNGKey(0)
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get(arch, smoke=True)
+        params = lm.init_model(cfg, key)
+        ocfg = OptConfig(warmup_steps=1)
+        opt = init_opt_state(params, ocfg)
+        batch = jax.tree.map(jnp.asarray, make_batch(cfg, CELL, 0, DataConfig()))
+        step = jax.jit(make_train_step(cfg, None, ocfg))
+        t_train = _time(lambda: step(params, opt, batch)[2]["loss"])
+
+        state = lm.DecodeState(caches=lm.init_cache(cfg, CELL.global_batch, 128),
+                               positions=jnp.zeros((CELL.global_batch,), jnp.int32))
+        dec_batch = {}
+        if cfg.input_kind == "embeds":
+            dec_batch["embeds"] = jnp.zeros((CELL.global_batch, 1, cfg.d_model))
+        else:
+            dec_batch["tokens"] = jnp.zeros((CELL.global_batch, 1), jnp.int32)
+        if cfg.input_kind == "tokens+image":
+            dec_batch["image_embeds"] = jnp.zeros((CELL.global_batch, cfg.enc_len, cfg.enc_dim))
+        dstep = jax.jit(lambda p, s, b: lm.decode_step(p, s, b, cfg))
+        t_dec = _time(lambda: dstep(params, state, dec_batch)[0])
+        out.append(f"{arch},{t_train*1e6:.0f},{t_dec*1e6:.0f}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,53 @@
+"""§3.2 layout-agnostic transform microbenchmark: relayout cost by plan kind
+(contiguous / hvector / hindexed / hindexed-gather) — the paper's MPI
+datatype taxonomy, timed through XLA."""
+import sys, os, time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bag, relayout_plan
+from repro.core.layout import scalar, vector, blocked, reorder
+
+
+def _time(fn, reps=20):
+    fn()  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(n=2048) -> list[str]:
+    col = scalar(np.float32) ^ vector("i", n) ^ vector("j", n)
+    row = scalar(np.float32) ^ vector("j", n) ^ vector("i", n)
+    # true block-major tiling: (J, I, j, i) — block grid outer, tiles inner
+    tiled = (col ^ blocked("i", "I", 128) ^ blocked("j", "J", 128)) ^ reorder("J", "I", "j", "i")
+    cross = col ^ blocked("i", "I2", 512)
+    data = jnp.arange(n * n, dtype=jnp.float32).reshape(n, n)
+    b = bag(col, data)
+
+    cases = {
+        "contiguous_same": (col, col),
+        "reshape_interleaved_blocks": (col, col ^ blocked("i", "Ib", 128)),
+        "hvector_transpose": (col, row),
+        "hindexed_tile": (col, tiled),
+        "hindexed_cross_block": (tiled, cross),
+    }
+    out = ["case,kind,us_per_call,GBps"]
+    nbytes = n * n * 4
+    for name, (src, dst) in cases.items():
+        plan = relayout_plan(src, dst)
+        x_src = b.to_layout(src).data  # input materialized in the src layout
+        f = jax.jit(lambda x, plan=plan: plan.apply(x))
+        sec = _time(lambda: f(x_src))
+        out.append(f"{name},{plan.kind},{sec*1e6:.0f},{nbytes/sec/1e9:.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,50 @@
+"""Aggregate the dry-run JSON records into the §Roofline table
+(benchmarks/results/*.json -> CSV + markdown)."""
+import glob
+import json
+import os
+import sys
+
+HERE = os.path.dirname(__file__)
+
+
+def load_records(results_dir=None, mesh="singlepod", tag="baseline"):
+    results_dir = results_dir or os.path.join(HERE, "results")
+    recs = []
+    for path in sorted(glob.glob(os.path.join(results_dir, f"*__{mesh}__{tag}.json"))):
+        recs.append(json.load(open(path)))
+    return recs
+
+
+def run(mesh="singlepod", tag="baseline") -> list[str]:
+    recs = load_records(mesh=mesh, tag=tag)
+    out = ["arch,shape,status,t_compute_s,t_memory_s,t_collective_s,dominant,useful_ratio,roofline_fraction"]
+    for r in recs:
+        if r.get("status") == "skipped":
+            out.append(f"{r['arch']},{r['shape']},skipped,,,,,,")
+            continue
+        if r.get("status") != "ok":
+            out.append(f"{r['arch']},{r['shape']},FAILED,,,,,,")
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"{r['arch']},{r['shape']},ok,{rf['t_compute']:.4g},{rf['t_memory']:.4g},"
+            f"{rf['t_collective']:.4g},{rf['dominant']},{rf['useful_ratio']:.3f},"
+            f"{rf['roofline_fraction']:.4f}"
+        )
+    return out
+
+
+def markdown(mesh="singlepod", tag="baseline") -> str:
+    lines = run(mesh, tag)
+    head = lines[0].split(",")
+    md = ["| " + " | ".join(head) + " |", "|" + "---|" * len(head)]
+    for l in lines[1:]:
+        md.append("| " + " | ".join(l.split(",")) + " |")
+    return "\n".join(md)
+
+
+if __name__ == "__main__":
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "singlepod"
+    tag = sys.argv[2] if len(sys.argv) > 2 else "baseline"
+    print("\n".join(run(mesh, tag)))

@@ -1,0 +1,56 @@
+"""Benchmark harness entry point: one section per paper table/figure plus
+the LM-framework extensions.  Prints ``name,us_per_call,derived`` CSV blocks.
+
+  * feature_matrix  — paper Table 1 (programmatic feature checks)
+  * relayout_bench  — paper §3.2 transform taxonomy microbench
+  * gemm_layouts    — paper Fig. 3 (8 C/A/B layout configs, MINI+EXTRALARGE,
+                      8 ranks) — pass --quick to use MINI only
+  * lm_step_bench   — per-arch smoke train/decode step times
+  * roofline_table  — §Roofline aggregation of the dry-run artifacts
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--skip gemm_layouts]
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="smaller datasets")
+    ap.add_argument("--skip", action="append", default=[])
+    args = ap.parse_args()
+
+    from benchmarks import feature_matrix, relayout_bench, lm_step_bench, roofline_table, gemm_layouts
+
+    sections = []
+    if "feature_matrix" not in args.skip:
+        sections.append(("feature_matrix (paper Table 1)", lambda: feature_matrix.run()))
+    if "relayout_bench" not in args.skip:
+        sections.append(("relayout_bench (paper §3.2)", lambda: relayout_bench.run()))
+    if "gemm_layouts" not in args.skip:
+        datasets = ("MINI",) if args.quick else ("MINI", "EXTRALARGE")
+        sections.append(("gemm_layouts (paper Fig. 3)", lambda: gemm_layouts.run(datasets=datasets)))
+    if "lm_step_bench" not in args.skip:
+        sections.append(("lm_step_bench (framework)", lambda: lm_step_bench.run()))
+    if "roofline_table" not in args.skip:
+        sections.append(("roofline_table singlepod (§Roofline)", lambda: roofline_table.run("singlepod")))
+        sections.append(("roofline_table multipod (§Dry-run)", lambda: roofline_table.run("multipod")))
+
+    failures = 0
+    for name, fn in sections:
+        print(f"\n=== {name} ===")
+        t0 = time.time()
+        try:
+            for line in fn():
+                print(line)
+            print(f"# section completed in {time.time()-t0:.1f}s")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"# SECTION FAILED: {e!r}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Quickstart: the layout algebra in five minutes.
+
+Walks through the paper's core ideas on small matrices:
+  1. layouts and bags (logical indices, physical freedom)
+  2. traversers (iteration order as a first-class object)
+  3. relayout = the MPI-datatype engine (auto transform between layouts)
+  4. distribution: scatter tiles with *different* layouts per side
+  5. the same algebra deriving LM parameter shardings
+
+Run: python examples/quickstart.py
+"""
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    bag, idx, traverser, fix, mpi_traverser, scatter, gather, rank_map,
+    relayout_plan, transfer_kind,
+)
+from repro.core.layout import scalar, vector, into_blocks, blocked
+from repro.core.traverser import hoist
+
+print("== 1. layouts and bags ==")
+N, M = 6, 4
+col_major = scalar(np.float32) ^ vector("i", N) ^ vector("j", M)  # j outermost
+row_major = scalar(np.float32) ^ vector("j", M) ^ vector("i", N)
+A = bag(col_major, jnp.arange(N * M, dtype=jnp.float32))
+print(f"col-major layout: {col_major}")
+print(f"A[i=2, j=3] = {A[idx(i=2, j=3)]} (same logical element in any layout)")
+
+print("\n== 2. traversers ==")
+acc = []
+traverser(A) ^ hoist("i") ^ fix(j=1) | (lambda s: acc.append(float(A[s])))
+print(f"column j=1 via hoisted traverser: {acc}")
+
+print("\n== 3. relayout: the MPI-datatype engine ==")
+B = A.to_layout(row_major)
+print(f"transfer col->row is kind={transfer_kind(col_major, row_major)!r}")
+print(f"plan: {relayout_plan(col_major, row_major).describe()}")
+tiled = col_major ^ blocked("i", "I", 3)
+print(f"col->tiled is kind={transfer_kind(col_major, tiled)!r} (still no copy loops: one XLA op)")
+assert A[idx(i=4, j=2)] == B[idx(i=4, j=2)] == A.to_layout(tiled)[idx(i=4, j=2)]
+
+print("\n== 4. layout-agnostic scatter over 8 'ranks' ==")
+mesh = jax.make_mesh((8,), ("r",), axis_types=(jax.sharding.AxisType.Auto,))
+big = scalar(np.float32) ^ vector("i", 8) ^ vector("j", 16)
+root_layout = big ^ into_blocks("j", "R", num_blocks=8)
+root = bag(root_layout, jnp.arange(128, dtype=jnp.float32))
+dt = mpi_traverser("R", traverser(root), mesh)
+tile_layout = scalar(np.float32) ^ vector("j", 2) ^ vector("i", 8)  # tiles row-major!
+tiles = scatter(root, tile_layout, dt)  # transform rides the transfer
+doubled = rank_map(lambda rank, t: t.with_data(t.data * 2), dt, tiles)
+out = gather(doubled, root_layout)
+print(f"scatter->compute->gather ok: {bool(jnp.all(out.data == root.data * 2))}")
+
+print("\n== 5. the same algebra shards a transformer ==")
+from repro import configs
+from repro.models import lm
+from repro.models.sharding import make_recipe
+
+cfg = configs.get("phi4-mini-3.8b", smoke=True)
+mesh2 = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+recipe = make_recipe(cfg, mesh2)
+specs = lm.build_specs(cfg)
+pspecs = recipe.param_pspecs(specs)
+print(f"bindings: {recipe.bindings}  (attn mode: {recipe.attn_mode})")
+print(f"embed:      {pspecs['embed']}")
+print(f"attn wq:    {pspecs['blocks']['attn']['wq']}")
+print(f"ffn w_gate: {pspecs['blocks']['ffn']['w_gate']}")
+print("\nno PartitionSpec was written by hand — they are derived from the "
+      "layout bindings,\nexactly like MPI datatypes derived from Noarr structures.")

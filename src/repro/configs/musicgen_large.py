@@ -1,0 +1,18 @@
+"""musicgen-large [audio] — decoder-only over EnCodec tokens
+[arXiv:2306.05284; hf].  The EnCodec frontend is a STUB per the assignment:
+``input_specs()`` provides pre-computed frame embeddings (B, S, d_model);
+positions use sinusoidal embeddings, FFN is GELU (MusicGen convention)."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="musicgen-large", family="audio",
+    n_layers=48, d_model=2048, n_heads=32, n_kv=32, d_ff=8192,
+    vocab=2048, head_dim=64, ffn_kind="gelu", input_kind="embeds",
+)
+
+SMOKE = ArchConfig(
+    name="musicgen-smoke", family="audio",
+    n_layers=2, d_model=64, n_heads=4, n_kv=4, d_ff=128,
+    vocab=128, head_dim=16, ffn_kind="gelu", input_kind="embeds",
+    attn_block=64,
+)

@@ -1,0 +1,86 @@
+"""repro.core — layout-agnostic distributed-array algebra (the paper's
+contribution, adapted from Noarr-MPI to JAX/TPU).
+
+Public API mirrors the paper's vocabulary:
+
+* layouts:    ``scalar ^ vector ^ into_blocks ^ hoist ^ ...`` -> :class:`Layout`
+* bags:       :func:`bag` / :class:`Bag` — buffer + layout, logical indexing
+* traversers: :func:`traverser` ^ ``hoist/fix/span/bcast/merge_blocks``
+* relayout:   :func:`relayout` — the MPI-datatype-construction analogue
+* dist:       :func:`mpi_traverser` -> :class:`DistTraverser`; layout-agnostic
+              ``scatter/gather/broadcast`` and sharding derivation
+"""
+from .dims import LayoutError, common_refinement
+from .layout import (
+    Axis,
+    Layout,
+    ProtoStructure,
+    scalar,
+    vector,
+    vectors,
+    vectors_like,
+    into_blocks,
+    hoist,
+    reorder,
+    rename,
+    set_length,
+    fix_dim,
+)
+from .layout import merge_blocks as merge_blocks_layout
+from .bag import Bag, bag, idx
+from .traverser import (
+    Traverser,
+    traverser,
+    fix,
+    span,
+    bcast,
+    merge_blocks,
+)
+from .traverser import hoist as hoist_trav
+from .traverser import set_length as set_length_trav
+from .relayout import RelayoutPlan, relayout, relayout_plan, transfer_kind
+from .dist import DistTraverser, mpi_traverser
+from .collectives import DistBag, scatter, gather, broadcast, all_gather_bag, reduce_scatter_bag, rank_map
+
+__all__ = [
+    "LayoutError",
+    "common_refinement",
+    "Axis",
+    "Layout",
+    "ProtoStructure",
+    "scalar",
+    "vector",
+    "vectors",
+    "vectors_like",
+    "into_blocks",
+    "hoist",
+    "reorder",
+    "rename",
+    "set_length",
+    "fix_dim",
+    "merge_blocks_layout",
+    "Bag",
+    "bag",
+    "idx",
+    "Traverser",
+    "traverser",
+    "fix",
+    "span",
+    "bcast",
+    "merge_blocks",
+    "hoist_trav",
+    "set_length_trav",
+    "RelayoutPlan",
+    "relayout",
+    "relayout_plan",
+    "transfer_kind",
+    "DistTraverser",
+    "mpi_traverser",
+    "scatter",
+    "gather",
+    "broadcast",
+    "all_gather_bag",
+    "reduce_scatter_bag",
+    "rank_map",
+    "DistBag",
+]

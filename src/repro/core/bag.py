@@ -1,0 +1,98 @@
+"""Noarr *bags*: a data buffer paired with a :class:`Layout`.
+
+``bag[state]`` accesses an element through the logical index space regardless
+of the physical layout (paper §2).  Bags are functional on the JAX side:
+``bag.at(state).set(v)`` returns a new bag, matching ``jnp.ndarray.at``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import jax.numpy as jnp
+import numpy as np
+
+from .dims import LayoutError
+from .layout import Layout
+from .relayout import relayout
+
+__all__ = ["Bag", "bag", "idx"]
+
+
+def idx(**indices: Any) -> dict[str, Any]:
+    """A Noarr state literal: ``idx(i=3, j=5)``."""
+    return dict(indices)
+
+
+@dataclasses.dataclass(frozen=True)
+class Bag:
+    data: Any  # jnp.ndarray (or np.ndarray for host-side bags)
+    layout: Layout
+
+    def __post_init__(self):
+        self.layout._require_resolved()
+        if tuple(self.data.shape) != self.layout.shape:
+            raise LayoutError(
+                f"bag: buffer shape {tuple(self.data.shape)} != layout shape {self.layout.shape}"
+            )
+        if np.dtype(self.data.dtype) != np.dtype(self.layout.dtype):
+            raise LayoutError(
+                f"bag: buffer dtype {self.data.dtype} != layout dtype {self.layout.dtype}"
+            )
+
+    # -- logical access --------------------------------------------------------
+    def _phys(self, state: Mapping[str, Any]) -> tuple[Any, ...]:
+        # "[] applies the relevant index sub-set of the state" (paper Listing 1):
+        # extra dims in the state are ignored.
+        sub = {d: state[d] for d, _ in self.layout.dim_map if d in state}
+        return self.layout.physical_index(sub)
+
+    def __getitem__(self, state: Mapping[str, Any]):
+        return self.data[self._phys(state)]
+
+    class _At:
+        def __init__(self, b: "Bag", state: Mapping[str, Any]):
+            self._b, self._state = b, state
+
+        def set(self, value) -> "Bag":
+            b = self._b
+            return Bag(b.data.at[b._phys(self._state)].set(value), b.layout)
+
+        def add(self, value) -> "Bag":
+            b = self._b
+            return Bag(b.data.at[b._phys(self._state)].add(value), b.layout)
+
+    def at(self, state: Mapping[str, Any]) -> "Bag._At":
+        return Bag._At(self, state)
+
+    # -- layout agnosticism ------------------------------------------------------
+    def index_space(self) -> dict[str, int]:
+        return self.layout.index_space()
+
+    def to_layout(self, dst: Layout) -> "Bag":
+        """Rematerialize under a different physical layout (same logical space)."""
+        return Bag(relayout(self.data, self.layout, dst), dst)
+
+    def with_data(self, data) -> "Bag":
+        return Bag(data, self.layout)
+
+    # -- convenience ---------------------------------------------------------------
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return self.layout.shape
+
+    @property
+    def dtype(self):
+        return self.layout.dtype
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"Bag({self.layout!r})"
+
+
+def bag(layout: Layout, data: Any | None = None, *, fill: Any = 0) -> Bag:
+    """Allocate (or wrap) a buffer for ``layout`` (paper's ``bag(...)``)."""
+    if data is None:
+        data = jnp.full(layout.shape, fill, dtype=layout.dtype)
+    else:
+        data = jnp.asarray(data, dtype=layout.dtype).reshape(layout.shape)
+    return Bag(data, layout)

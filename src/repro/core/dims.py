@@ -1,0 +1,106 @@
+"""Named-dimension primitives shared by the whole layout algebra.
+
+The paper (Noarr-MPI) separates a structure's *logical index space* (named
+dimensions) from its *physical layout*.  This module holds the tiny shared
+vocabulary: dimension names, index-space dictionaries, mixed-radix helpers and
+the error type that plays the role of Noarr's compile-time signature checks
+(in JAX, "compile time" = Python trace time, before lowering).
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterable, Mapping, Sequence
+
+__all__ = [
+    "LayoutError",
+    "IndexSpace",
+    "check_same_space",
+    "mixed_radix_split",
+    "mixed_radix_join",
+    "common_refinement",
+    "prod",
+]
+
+# A logical index space: ordered mapping dim name -> extent.
+IndexSpace = dict
+
+
+class LayoutError(TypeError):
+    """Raised when index spaces / layouts are incompatible.
+
+    This is the JAX-side analogue of Noarr's signature type errors: it fires
+    at trace time, before any computation is lowered or executed.
+    """
+
+
+def prod(xs: Iterable[int]) -> int:
+    return math.prod(xs)
+
+
+def check_same_space(a: Mapping[str, int], b: Mapping[str, int], *, what: str = "operands") -> None:
+    """Type-safety check: both operands must span the same logical index space.
+
+    Order does not matter (that is the whole point of layout agnosticism);
+    the *set* of named extents must match exactly.
+    """
+    if dict(a) != dict(b):
+        only_a = {k: v for k, v in a.items() if b.get(k) != v}
+        only_b = {k: v for k, v in b.items() if a.get(k) != v}
+        raise LayoutError(
+            f"incompatible index spaces for {what}: {dict(a)} vs {dict(b)} "
+            f"(mismatch: {only_a} vs {only_b})"
+        )
+
+
+def mixed_radix_split(value, radices: Sequence[int]):
+    """Decompose ``value`` into indices along ``radices`` (outer..inner).
+
+    Works on Python ints and traced JAX integers alike (uses // and %).
+    """
+    out = []
+    for r in reversed(radices):
+        out.append(value % r)
+        value = value // r
+    return tuple(reversed(out))
+
+
+def mixed_radix_join(indices, radices: Sequence[int]):
+    """Inverse of :func:`mixed_radix_split`."""
+    value = 0
+    for idx, r in zip(indices, radices):
+        value = value * r + idx
+    return value
+
+
+def common_refinement(a: Sequence[int], b: Sequence[int]) -> list[int]:
+    """Coarsest common refinement of two factorizations of the same extent.
+
+    Example: ``common_refinement([64], [8, 8]) == [8, 8]``;
+             ``common_refinement([4, 16], [8, 8]) == [4, 2, 8]``.
+
+    This is the engine behind layout-agnostic relayouts between two
+    differently-blocked views of the same logical dimension.
+    """
+    if prod(a) != prod(b):
+        raise LayoutError(f"factorizations cover different extents: {list(a)} vs {list(b)}")
+
+    def inner_cumulative(f: Sequence[int]) -> set[int]:
+        # cumulative products counted from the *inner* (fastest) end
+        cums, c = set(), 1
+        for s in reversed(f):
+            c *= s
+            cums.add(c)
+        return cums
+
+    boundaries = sorted(inner_cumulative(a) | inner_cumulative(b))
+    out_inner_first: list[int] = []
+    prev = 1
+    for c in boundaries:
+        if c % prev:
+            raise LayoutError(
+                f"factorizations {list(a)} and {list(b)} have no common refinement "
+                f"(boundary {c} not divisible by {prev})"
+            )
+        out_inner_first.append(c // prev)
+        prev = c
+    return list(reversed(out_inner_first))

@@ -1,0 +1,83 @@
+"""Deterministic, resumable, sharded data pipeline.
+
+Two sources:
+  * ``synthetic`` — structured pseudo-text (Zipfian tokens with short-range
+    correlations so the loss actually decreases) generated per (seed, step):
+    restart-anywhere determinism, the property that makes checkpoint/restart
+    and elastic rescale exact;
+  * ``memmap`` — a flat binary token file (np.memmap), strided by step.
+
+Batches are placed with the recipe-derived input shardings (batch over
+``data``/``pod``), so each host only materializes its slice at scale (here,
+single-controller, jax.device_put handles placement).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+__all__ = ["DataConfig", "make_batch", "batch_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    source: str = "synthetic"  # synthetic | memmap
+    seed: int = 0
+    path: str | None = None  # for memmap
+    zipf_a: float = 1.2
+
+
+def _synthetic_tokens(rng: np.random.Generator, B: int, S: int, vocab: int, a: float):
+    """Zipfian marginals + Markov-ish repetition: 30% of positions copy the
+    token 2 back, which gives a learnable structure for loss-curve tests."""
+    base = rng.zipf(a, size=(B, S + 1)) % vocab
+    copy_mask = rng.random((B, S + 1)) < 0.3
+    out = base.copy()
+    out[:, 2:] = np.where(copy_mask[:, 2:], out[:, :-2], out[:, 2:])
+    return out.astype(np.int32)
+
+
+def make_batch(cfg, shape, step: int, dcfg: DataConfig = DataConfig()):
+    """Batch dict for (arch cfg, ShapeCell, step). Pure function of inputs."""
+    B, S = shape.global_batch, shape.seq_len
+    rng = np.random.default_rng(np.random.SeedSequence([dcfg.seed, step]))
+    batch = {}
+    if cfg.input_kind == "embeds":
+        # frontend stub: pre-computed frame embeddings
+        emb = rng.standard_normal((B, S, cfg.d_model), dtype=np.float32)
+        batch["embeds"] = emb
+        labels = rng.integers(0, cfg.vocab, (B, S), dtype=np.int32)
+        batch["labels"] = labels
+        return batch
+    if dcfg.source == "memmap":
+        data = np.memmap(dcfg.path, dtype=np.int32, mode="r")
+        need = B * (S + 1)
+        start = (step * need) % max(len(data) - need, 1)
+        toks = np.asarray(data[start : start + need]).reshape(B, S + 1) % cfg.vocab
+    else:
+        toks = _synthetic_tokens(rng, B, S, cfg.vocab, dcfg.zipf_a)
+    batch["tokens"] = toks[:, :-1]
+    batch["labels"] = toks[:, 1:]
+    if cfg.input_kind == "tokens+image":
+        batch["image_embeds"] = rng.standard_normal((B, cfg.enc_len, cfg.enc_dim), dtype=np.float32).astype(np.float32)
+    return batch
+
+
+def batch_specs(cfg, shape, *, abstract: bool = False):
+    """ShapeDtypeStructs for every model input of a cell (dry-run stand-ins)."""
+    import jax.numpy as jnp
+
+    B = shape.global_batch
+    S = shape.seq_len if shape.kind != "decode" else 1
+    out = {}
+    if cfg.input_kind == "embeds":
+        out["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.float32)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.input_kind == "tokens+image":
+        out["image_embeds"] = jax.ShapeDtypeStruct((B, cfg.enc_len, cfg.enc_dim), jnp.float32)
+    return out

@@ -1,0 +1,125 @@
+"""Blockwise (flash) causal attention Pallas kernel.
+
+The 32k-token prefill shapes make materialized (S, S) score matrices
+infeasible (32k^2 f32 = 4 GiB per head), so blockwise attention with an
+online softmax is *required* for the assigned shapes, not an optimization.
+
+TPU adaptation: the grid is (batch, q_heads, q_blocks, kv_blocks) with the KV
+block index innermost, so each program sees one (bq, d) query tile and one
+(bk, d) KV tile — both streamed HBM->VMEM by the BlockSpec machinery — and
+carries the online-softmax state (o, m, l) in VMEM scratch across the kv
+iteration.  GQA is handled in the K/V BlockSpec ``index_map`` (query head h
+reads KV head ``h // group``) — zero-copy head sharing, the BlockSpec
+analogue of the paper's layout-absorbed transfers.
+
+VMEM budget per program: q (bq, d) + K/V (bk, d) each + acc (bq, d) f32 +
+m/l (bq, 128) f32: with bq=bk=512, d=128 that is < 2 MiB << 16 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *, bq: int, bk: int, nkv: int, scale: float, causal: bool
+):
+    # v/o head dim may differ from q/k head dim (e.g. MLA value heads)
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal: whole block above the diagonal contributes nothing — skip.
+    diag_ok = (kj * bk < (qi + 1) * bq) if causal else True
+
+    @pl.when(diag_ok)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+        if causal:
+            q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            k_pos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(kj == nkv - 1)
+    def _store():
+        l = l_ref[:, 0]
+        l = jnp.where(l == 0.0, 1.0, l)  # guard fully-masked rows
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "bq", "bk", "interpret", "scale")
+)
+def flash_attention_pallas(
+    q,  # (B, Hq, Sq, D)
+    k,  # (B, Hkv, Skv, D)
+    v,  # (B, Hkv, Skv, D)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    bq: int = 512,
+    bk: int = 512,
+    interpret: bool = False,
+):
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    Dv = v.shape[-1]
+    if Hq % Hkv:
+        raise ValueError(f"Hq={Hq} not a multiple of Hkv={Hkv}")
+    group = Hq // Hkv
+    scale = float(scale if scale is not None else D ** -0.5)
+    bq_ = min(bq, Sq)
+    bk_ = min(bk, Skv)
+    if Sq % bq_ or Skv % bk_:
+        raise ValueError(f"seq lens ({Sq},{Skv}) must divide blocks ({bq_},{bk_})")
+    nkv = Skv // bk_
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq_, bk=bk_, nkv=nkv, scale=scale, causal=causal
+    )
+    grid = (B, Hq, Sq // bq_, nkv)
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq_, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk_, D), lambda b, h, i, j, group=group: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk_, Dv), lambda b, h, i, j, group=group: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq_, Dv), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, Dv), jnp.float32),
+            pltpu.VMEM((bq_, 128), jnp.float32),
+            pltpu.VMEM((bq_, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

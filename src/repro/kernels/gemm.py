@@ -1,0 +1,134 @@
+"""Layout-parametric tiled GEMM Pallas kernel (the paper's case study, §5).
+
+The paper evaluates a distributed GEMM whose three matrices each use an
+independently chosen major dimension (configurations ``C/A/B`` = ``I/I/J``
+etc., Fig. 3).  On TPU we adapt the idea to the MXU: the kernel's BlockSpec
+``index_map`` absorbs the operand orientation, so a column-major operand is
+consumed *without any pre-transpose pass* — the layout transformation rides
+along with the HBM->VMEM tile fetch, exactly like MPI datatypes performing
+the transform inside the transfer.
+
+Orientation encoding (matching the paper's x-axis labels):
+  * A is logically (i, k):  major='i' -> buffer (i, k);  major='k' -> buffer (k, i)
+  * B is logically (k, j):  major='k' -> buffer (k, j);  major='j' -> buffer (j, k)
+  * C is logically (i, j):  major='i' -> buffer (i, j);  major='j' -> buffer (j, i)
+
+('major' = the OUTER buffer axis, i.e. the slower-varying one.)
+
+VMEM budget: one (bm, bk) A tile + one (bk, bn) B tile + one (bm, bn) f32
+accumulator.  Defaults bm=bn=bk=256 in f32: 3*256*256*4 B = 768 KiB << 16 MiB
+VMEM; MXU dims are multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["gemm_pallas"]
+
+
+def _gemm_kernel(a_ref, b_ref, c_ref, acc_ref, *, a_trans: bool, b_trans: bool, c_trans: bool, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    if a_trans:
+        a = a.T  # (bk, bm) tile fetched in buffer order -> logical (bm, bk)
+    b = b_ref[...]
+    if b_trans:
+        b = b.T
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _store():
+        acc = acc_ref[...]
+        if c_trans:
+            acc = acc.T
+        c_ref[...] = acc.astype(c_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("majors", "bm", "bn", "bk", "interpret", "out_dtype"),
+)
+def gemm_pallas(
+    a,
+    b,
+    *,
+    majors: str = "I/I/K",  # C/A/B major dims, paper Fig. 3 labels
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 256,
+    interpret: bool = False,
+    out_dtype=None,
+):
+    """C = A @ B with per-operand physical orientation.
+
+    ``a``/``b`` are the *buffers* (already in their physical layout); the
+    ``majors`` string says how to interpret them, e.g. ``"J/K/J"`` means C is
+    j-major (buffer (j,i)), A is k-major (buffer (k,i)), B is j-major
+    (buffer (j,k)).
+    """
+    c_major, a_major, b_major = majors.upper().split("/")
+    a_trans = a_major == "K"  # buffer (k, i) -> need transpose of tiles
+    b_trans = b_major == "J"
+    c_trans = c_major == "J"
+
+    if a_trans:
+        K_, M = a.shape
+    else:
+        M, K_ = a.shape
+    if b_trans:
+        N, Kb = b.shape
+    else:
+        Kb, N = b.shape
+    if K_ != Kb:
+        raise ValueError(f"contraction mismatch: {a.shape} vs {b.shape} (majors={majors})")
+    K = K_
+    bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
+    if M % bm_ or N % bn_ or K % bk_:
+        raise ValueError(f"dims ({M},{N},{K}) must divide block ({bm_},{bn_},{bk_})")
+    nm, nn, nk = M // bm_, N // bn_, K // bk_
+
+    a_spec = (
+        pl.BlockSpec((bk_, bm_), lambda i, j, k: (k, i))
+        if a_trans
+        else pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k))
+    )
+    b_spec = (
+        pl.BlockSpec((bn_, bk_), lambda i, j, k: (j, k))
+        if b_trans
+        else pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j))
+    )
+    c_spec = (
+        pl.BlockSpec((bn_, bm_), lambda i, j, k: (j, i))
+        if c_trans
+        else pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j))
+    )
+    out_dtype = out_dtype or a.dtype
+    out_shape = (N, M) if c_trans else (M, N)
+
+    kernel = functools.partial(
+        _gemm_kernel, a_trans=a_trans, b_trans=b_trans, c_trans=c_trans, nk=nk
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(nm, nn, nk),
+        in_specs=[a_spec, b_spec],
+        out_specs=c_spec,
+        out_shape=jax.ShapeDtypeStruct(out_shape, out_dtype),
+        scratch_shapes=[_vmem((bm_, bn_), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,54 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each op picks an implementation:
+  * ``impl="pallas"``     — compiled Pallas (the TPU target),
+  * ``impl="interpret"``  — Pallas interpret mode (CPU-correctness runs),
+  * ``impl="ref"``        — the pure-jnp oracle (also the dry-run model path
+                            on the CPU backend, where Mosaic cannot lower).
+
+``default_impl()`` resolves from the backend so model code never branches:
+TPU -> pallas, everything else -> ref.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref as _ref
+from .gemm import gemm_pallas
+from .flash_attention import flash_attention_pallas
+from .relayout import transpose_tiled_pallas
+
+__all__ = ["default_impl", "gemm", "flash_attention", "transpose_tiled"]
+
+
+def default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _resolve(impl: str | None) -> str:
+    return impl or default_impl()
+
+
+def gemm(a, b, *, majors: str = "I/I/K", impl: str | None = None, **kw):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.gemm_ref(a, b, majors=majors, out_dtype=kw.get("out_dtype"))
+    return gemm_pallas(a, b, majors=majors, interpret=(impl == "interpret"), **kw)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, impl: str | None = None, mixed: bool | None = None, **kw):
+    impl = _resolve(impl)
+    if impl == "ref":
+        block = kw.get("bk", 128)
+        return _ref.blockwise_attention_ref(
+            q, k, v, causal=causal, block=min(block, k.shape[2]), mixed=mixed
+        )
+    # the Pallas kernel is always mixed-precision internally (f32 VMEM acc)
+    return flash_attention_pallas(q, k, v, causal=causal, interpret=(impl == "interpret"), **kw)
+
+
+def transpose_tiled(x, *, impl: str | None = None, **kw):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.transpose_ref(x)
+    return transpose_tiled_pallas(x, interpret=(impl == "interpret"), **kw)

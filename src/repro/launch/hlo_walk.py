@@ -1,0 +1,334 @@
+"""Loop-aware accounting over optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body once, which silently
+undercounts everything inside ``lax.scan`` — i.e. *the entire model* when
+scanning over layers.  This walker parses the HLO text, recovers loop trip
+counts from each ``while`` condition's comparison constant, and multiplies
+op costs by the product of enclosing trip counts.  It produces:
+
+  * ``flops``            — 2 * result * contraction for every ``dot``;
+  * ``bytes``            — operands + result for every top-level op at
+                           fusion granularity (fusion internals move through
+                           registers/VMEM, so the fusion call's operands and
+                           result are the memory traffic — matching how TPUs
+                           actually behave);
+  * ``collective_bytes`` — per-kind bytes for all-gather / all-reduce /
+                           reduce-scatter / all-to-all / collective-permute,
+                           loop-multiplied (factors: all-reduce x2 for the
+                           reduce+broadcast phases, others x1).
+
+Everything is static text analysis of the compiled artifact — the "profile"
+available without hardware (see EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Iterable
+
+__all__ = ["HloStats", "analyze", "top_contributors"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+([\w\-]+)")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w\.\-]+)[^\n{]*\{", re.M)
+_CALL_ATTR_RE = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)=\{?([%\w\.\-, ]+)\}?")
+_WHILE_RE = re.compile(r"while\(.*?\).*?condition=(%[\w\.\-]+),\s*body=(%[\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def _tensor_bytes(shape_text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(shape_text: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    body: str
+    defs: dict  # %var -> shape text
+    lines: list
+
+
+def _split_computations(text: str) -> dict[str, _Computation]:
+    comps: dict[str, _Computation] = {}
+    for m in _COMP_RE.finditer(text):
+        name = m.group(1)
+        # find matching closing brace at column 0
+        start = m.end()
+        end = text.find("\n}", start)
+        if end == -1:
+            end = len(text)
+        body = text[start:end]
+        defs = {}
+        lines = []
+        for line in body.split("\n"):
+            dm = _DEF_RE.match(line)
+            if dm:
+                defs[dm.group(1)] = dm.group(2)
+                lines.append((dm.group(1), dm.group(2), dm.group(3), line))
+        comps[name] = _Computation(name, body, defs, lines)
+    return comps
+
+
+def _trip_count(cond: _Computation) -> int:
+    """Loop trip count from the condition's comparison constant (scan-style
+    loops compare the induction variable against a constant bound)."""
+    consts = [int(c) for c in _CONST_RE.findall(cond.body)]
+    consts = [c for c in consts if c > 1]
+    return max(consts) if consts else 1
+
+
+def _fusion_traffic(line: str, result_shape: str, comp: _Computation, comps: dict) -> int:
+    """Realistic HBM traffic of one fusion call.
+
+    Stacked scan carries (all layers' weights) enter while-body fusions as
+    whole-buffer operands but are only *sliced* inside; symmetrically,
+    in-place updates write only the slice.  So:
+      * an input parameter consumed exclusively by dynamic-slice ops counts
+        as the slice size;
+      * if the fusion root is dynamic-update-slice (or a tuple of them), the
+        output counts as the update sizes, not the full buffers.
+    Everything else counts at face value.
+    """
+    cm = _CALL_ATTR_RE.search(line)
+    callee = comps.get(cm.group(1).split(",")[0].strip()) if cm else None
+    if callee is None:
+        return _tensor_bytes(result_shape)
+
+    body = callee.body
+    # --- inputs ---
+    total = 0
+    params: dict[int, tuple[str, str]] = {}
+    for var, shape, op, l in callee.lines:
+        if op == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", l)
+            if pm:
+                params[int(pm.group(1))] = (var, shape)
+    for idx, (pvar, pshape) in params.items():
+        uses = []
+        for var, shape, op, l in callee.lines:
+            if op == "parameter":
+                continue
+            rhs = l.split("=", 1)[-1]
+            if re.search(re.escape(pvar) + r"(?![\w\.\-])", rhs):
+                refs = re.findall(r"%[\w\.\-]+", rhs)
+                is_dus_dest = op == "dynamic-update-slice" and refs and refs[0] == pvar
+                uses.append((op, shape, is_dus_dest))
+        if uses and all(op == "dynamic-slice" for op, _, _ in uses):
+            # sliced-only access: traffic = the slices, not the buffer
+            total += sum(_tensor_bytes(s) for _, s, _ in uses)
+        elif uses and all(dest for _, _, dest in uses):
+            # only used as a dynamic-update-slice destination: in-place
+            # aliased buffer, the written slice is counted on the output side
+            total += 0
+        else:
+            total += _tensor_bytes(pshape)
+    # --- output ---
+    root_line = next((l for var, shape, op, l in callee.lines if l.strip().startswith("ROOT")), None)
+    out_bytes = _tensor_bytes(result_shape)
+    if root_line is not None:
+        rm = _DEF_RE.match(root_line)
+        if rm and rm.group(3) == "dynamic-update-slice":
+            ops_refs = re.findall(r"%[\w\.\-]+", root_line.split("=", 1)[1])
+            if len(ops_refs) >= 2 and ops_refs[1] in callee.defs:
+                out_bytes = _tensor_bytes(callee.defs[ops_refs[1]])
+        elif rm and rm.group(3) == "tuple":
+            ops_refs = re.findall(r"%[\w\.\-]+", root_line.split("=", 1)[1])
+            parts = 0
+            all_known = True
+            for r in ops_refs:
+                if r not in callee.defs:
+                    all_known = False
+                    break
+                rop = next((o for v, s, o, _ in callee.lines if v == r), "")
+                if rop == "dynamic-update-slice":
+                    rl = next(l for v, s, o, l in callee.lines if v == r)
+                    urefs = re.findall(r"%[\w\.\-]+", rl.split("=", 1)[1])
+                    if len(urefs) >= 2 and urefs[1] in callee.defs:
+                        parts += _tensor_bytes(callee.defs[urefs[1]])
+                    else:
+                        parts += _tensor_bytes(callee.defs[r])
+                else:
+                    parts += _tensor_bytes(callee.defs[r])
+            if all_known:
+                out_bytes = parts
+    return total + out_bytes
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    coll_by_op: dict = dataclasses.field(default_factory=dict)
+    dot_flops_by_mult: dict = dataclasses.field(default_factory=dict)
+    loop_trip_counts: list = dataclasses.field(default_factory=list)
+
+
+def analyze(hlo_text: str) -> HloStats:
+    comps = _split_computations(hlo_text)
+    entry_match = re.search(r"^ENTRY\s+(%[\w\.\-]+)", hlo_text, re.M)
+    if entry_match is None:
+        raise ValueError("no ENTRY computation found")
+    entry = entry_match.group(1)
+
+    # computations called as fusion bodies are accounted at their call site
+    fusion_bodies: set[str] = set()
+    for comp in comps.values():
+        for _, _, op, line in comp.lines:
+            if op == "fusion":
+                cm = _CALL_ATTR_RE.search(line)
+                if cm:
+                    for callee in cm.group(1).split(","):
+                        fusion_bodies.add(callee.strip())
+
+    stats = HloStats()
+    visited: dict[str, float] = {}
+
+    def walk(name: str, mult: float) -> None:
+        comp = comps.get(name)
+        if comp is None:
+            return
+        # a computation may be reached multiple times with different
+        # multipliers (rare); accumulate each visit independently
+        for var, shape, op, line in comp.lines:
+            if op == "while":
+                wm = _WHILE_RE.search(line)
+                if wm:
+                    cond_name, body_name = wm.group(1), wm.group(2)
+                    t = _trip_count(comps[cond_name]) if cond_name in comps else 1
+                    stats.loop_trip_counts.append(t)
+                    walk(body_name, mult * t)
+                    # condition runs t+1 times but is O(1); ignore
+                continue
+            if op in ("call", "conditional", "custom-call", "reduce", "sort", "scatter", "map"):
+                cm = _CALL_ATTR_RE.search(line)
+                if cm:
+                    for callee in cm.group(1).split(","):
+                        callee = callee.strip()
+                        if callee in comps and callee not in fusion_bodies:
+                            walk(callee, mult)
+            # ---- traffic ----
+            if op not in _NO_TRAFFIC:
+                if op == "fusion":
+                    b = _fusion_traffic(line, shape, comp, comps)
+                else:
+                    b = _tensor_bytes(shape)  # result
+                    for operand in re.findall(r"%[\w\.\-]+", line.split("=", 1)[1]):
+                        if operand in comp.defs:
+                            oshape = comp.defs[operand]
+                            odef_op = next((o for v, s, o, _ in comp.lines if v == operand), "")
+                            if odef_op not in ("constant",):
+                                b += _tensor_bytes(oshape)
+                stats.bytes += mult * b
+            # ---- collectives ----
+            for coll in _COLLECTIVES:
+                if op == coll or op == coll + "-done":
+                    cb = _tensor_bytes(shape if not op.endswith("-done") else shape)
+                    factor = 2 if coll == "all-reduce" else 1
+                    stats.collective_bytes += mult * cb * factor
+                    stats.coll_by_op[coll] = stats.coll_by_op.get(coll, 0.0) + mult * cb * factor
+                    break
+                if op == coll + "-start":
+                    break  # counted at -done
+            # ---- flops ----
+            if op == "dot":
+                out_dims = _shape_dims(shape)
+                out_elems = 1
+                for d in out_dims:
+                    out_elems *= d
+                km = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+                contraction = 1
+                ops_refs = re.findall(r"%[\w\.\-]+", line.split("=", 1)[1])
+                if km and ops_refs:
+                    lhs_shape = comp.defs.get(ops_refs[0], "")
+                    lhs_dims = _shape_dims(lhs_shape)
+                    for idx in km.group(1).split(","):
+                        if idx and int(idx) < len(lhs_dims):
+                            contraction *= lhs_dims[int(idx)]
+                f = 2.0 * out_elems * contraction
+                stats.flops += mult * f
+                stats.dot_flops_by_mult[mult] = stats.dot_flops_by_mult.get(mult, 0.0) + f
+
+    walk(entry, 1.0)
+    return stats
+
+
+def top_contributors(hlo_text: str, k: int = 15) -> dict:
+    """Per-op breakdown of bytes and flops (loop-multiplied) — the 'profile'
+    for the §Perf hypothesis loop."""
+    comps = _split_computations(hlo_text)
+    entry = re.search(r"^ENTRY\s+(%[\w\.\-]+)", hlo_text, re.M).group(1)
+    by_bytes: dict = {}
+    by_flops: dict = {}
+
+    def walk(name: str, mult: float) -> None:
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for var, shape, op, line in comp.lines:
+            if op == "while":
+                wm = _WHILE_RE.search(line)
+                if wm:
+                    t = _trip_count(comps[wm.group(1)]) if wm.group(1) in comps else 1
+                    walk(wm.group(2), mult * t)
+                continue
+            meta = re.search(r'op_name="([^"]*)"', line)
+            tag = meta.group(1).split("/")[-1][:60] if meta else op
+            key = (op, tag)
+            if op not in _NO_TRAFFIC:
+                if op == "fusion":
+                    b = _fusion_traffic(line, shape, comp, comps)
+                else:
+                    b = _tensor_bytes(shape)
+                    for operand in re.findall(r"%[\w\.\-]+", line.split("=", 1)[1]):
+                        if operand in comp.defs:
+                            b += _tensor_bytes(comp.defs[operand])
+                by_bytes[key] = by_bytes.get(key, 0.0) + mult * b
+            if op == "dot":
+                out_dims = _shape_dims(shape)
+                out_elems = 1
+                for d in out_dims:
+                    out_elems *= d
+                km = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+                contraction = 1
+                refs = re.findall(r"%[\w\.\-]+", line.split("=", 1)[1])
+                if km and refs:
+                    lhs_dims = _shape_dims(comp.defs.get(refs[0], ""))
+                    for idx in km.group(1).split(","):
+                        if idx and int(idx) < len(lhs_dims):
+                            contraction *= lhs_dims[int(idx)]
+                by_flops[key] = by_flops.get(key, 0.0) + mult * 2.0 * out_elems * contraction
+
+    walk(entry, 1.0)
+    return {
+        "bytes": sorted(by_bytes.items(), key=lambda kv: -kv[1])[:k],
+        "flops": sorted(by_flops.items(), key=lambda kv: -kv[1])[:k],
+    }

@@ -1,0 +1,164 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs  / (chips * peak_FLOPs)
+    memory     = HLO_bytes  / (chips * HBM_bw)
+    collective = coll_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (whole-program,
+already divided across devices by SPMD partitioning — the CPU backend
+reports per-partition module costs; see note below).  Collective bytes are
+parsed from the optimized HLO text: collectives only exist *after* SPMD
+partitioning, so ``compiled.as_text()`` is the source of truth.
+
+Per-op byte accounting (standard ring-algorithm costs, factors simplified):
+    all-gather / all-to-all / collective-permute : result bytes x 1
+    reduce-scatter                               : input  bytes x 1
+    all-reduce                                   : result bytes x 2
+
+TPU v5e constants (per chip): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.
+
+NOTE (CPU-backend quirk): XLA:CPU's cost analysis reports the *per-partition*
+module, but some reductions fold; we therefore also report MODEL_FLOPS =
+6*N*D computed analytically and the ratio — the sanity anchor the perf loop
+optimizes against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+import numpy as np
+
+__all__ = ["HW", "collective_bytes", "roofline_report"]
+
+# TPU v5e-ish hardware constants
+HW = {
+    "peak_flops": 197e12,  # bf16 per chip
+    "hbm_bw": 819e9,  # bytes/s per chip
+    "link_bw": 50e9,  # bytes/s per ICI link
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+# result-side shapes: `op-name = TYPE[dims]{layout} opcode(...)` or tuple results
+_OP_RE = re.compile(
+    r"=\s*(?P<shape>\([^=]*?\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum per-op-kind bytes over the optimized HLO (async start/done pairs
+    are counted once, via the ``-done`` op's result tensor)."""
+    out: dict[str, int] = {}
+    for m in _OP_RE.finditer(hlo_text):
+        matched = hlo_text[m.start() : m.end()]
+        # async pairs: the -start result is a (operand, result) tuple buffer —
+        # counting it would double-count; the -done carries the final tensor.
+        if "-start" in matched:
+            continue
+        op = m.group("op")
+        b = _shape_bytes(m.group("shape"))
+        if op == "all-reduce":
+            b *= 2
+        out[op] = out.get(op, 0) + b
+    return out
+
+
+@dataclasses.dataclass
+class RooflineResult:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_by_op: dict
+    model_flops: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / (chips * per-device HLO FLOPs): how much of the
+        compiled compute is 'useful' 6ND math (catches remat/redundancy)."""
+        total = self.chips * self.hlo_flops
+        return self.model_flops / total if total else float("nan")
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Headline score: ideal useful-math time / modeled step time.
+
+        Ideal = MODEL_FLOPS spread over all chips at peak.  Modeled step
+        time = max of the three terms (perfect overlap assumption — the
+        optimistic roofline convention).  1.0 = the hardware ceiling."""
+        t_ideal = (self.model_flops / self.chips) / HW["peak_flops"]
+        t_actual = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_ideal / t_actual if t_actual else float("nan")
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(
+            dominant=self.dominant,
+            useful_ratio=self.useful_ratio,
+            roofline_fraction=self.roofline_fraction,
+        )
+        return d
+
+
+def roofline_report(*, arch: str, shape: str, mesh_name: str, chips: int,
+                    cost: dict, hlo_text: str, model_flops: float) -> RooflineResult:
+    """All quantities are per-device/per-step, from the loop-aware HLO walk
+    (``hlo_walk.analyze``); ``cost_analysis`` values are recorded upstream as
+    a cross-check only (they undercount scan loops)."""
+    from . import hlo_walk
+
+    st = hlo_walk.analyze(hlo_text)
+    return RooflineResult(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops=st.flops,  # per device
+        hlo_bytes=st.bytes,  # per device
+        coll_bytes=st.collective_bytes,
+        coll_by_op={k: float(v) for k, v in st.coll_by_op.items()},
+        model_flops=model_flops,
+        t_compute=st.flops / HW["peak_flops"],
+        t_memory=st.bytes / HW["hbm_bw"],
+        t_collective=st.collective_bytes / HW["link_bw"],
+    )

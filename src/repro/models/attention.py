@@ -1,0 +1,251 @@
+"""Attention family: GQA (RoPE, optional QKV bias), MLA, cross-attention.
+
+Two execution modes per op:
+  * ``seq`` (train / prefill): blockwise flash attention — Pallas on TPU,
+    pure-jnp online-softmax scan elsewhere (identical math).
+  * ``decode``: single new token against a KV cache — dense streaming
+    attention.  With the cache's seq dim sharded over the ``model`` mesh
+    axis, XLA turns the softmax reductions into the cross-device
+    online-softmax merge (flash-decoding) automatically; the layout algebra
+    picks the cache layout.
+
+All weights are declared via :func:`repro.models.module.pspec` with named
+dims — sharding recipes bind them to mesh axes elsewhere.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .module import pspec
+from .sharding import shard_act
+
+# ------------------------------------------------------------------ RoPE ----
+
+def rope_angles(positions, dim: int, theta: float = 10000.0):
+    """positions (...,) int32 -> cos/sin (..., dim/2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., S, D even); cos/sin (S, D/2) or broadcastable."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    shape = [1] * (x.ndim - 2) + list(cos.shape)
+    c = cos.reshape(shape)
+    s = sin.reshape(shape)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------ param specs ----
+
+def gqa_specs(d_model: int, n_heads: int, n_kv: int, head_dim: int, *, qkv_bias: bool = False, dtype=jnp.float32):
+    s = {
+        "wq": pspec(("m", d_model), ("h", n_heads), ("d", head_dim), dtype=dtype, fan_in=("m",)),
+        "wk": pspec(("m", d_model), ("g", n_kv), ("d", head_dim), dtype=dtype, fan_in=("m",)),
+        "wv": pspec(("m", d_model), ("g", n_kv), ("d", head_dim), dtype=dtype, fan_in=("m",)),
+        "wo": pspec(("h", n_heads), ("d", head_dim), ("m", d_model), dtype=dtype, fan_in=("h", "d")),
+    }
+    if qkv_bias:
+        s["bq"] = pspec(("h", n_heads), ("d", head_dim), dtype=dtype, init="zeros")
+        s["bk"] = pspec(("g", n_kv), ("d", head_dim), dtype=dtype, init="zeros")
+        s["bv"] = pspec(("g", n_kv), ("d", head_dim), dtype=dtype, init="zeros")
+    return s
+
+
+def mla_specs(d_model: int, n_heads: int, *, q_rank: int, kv_rank: int, d_nope: int, d_rope: int, d_v: int, dtype=jnp.float32):
+    return {
+        "wdq": pspec(("m", d_model), ("q", q_rank), dtype=dtype, fan_in=("m",)),
+        "wuq": pspec(("q", q_rank), ("h", n_heads), ("c", d_nope + d_rope), dtype=dtype, fan_in=("q",)),
+        "wdkv": pspec(("m", d_model), ("k", kv_rank), dtype=dtype, fan_in=("m",)),
+        "wkr": pspec(("m", d_model), ("r", d_rope), dtype=dtype, fan_in=("m",)),
+        "wuk": pspec(("k", kv_rank), ("h", n_heads), ("n", d_nope), dtype=dtype, fan_in=("k",)),
+        "wuv": pspec(("k", kv_rank), ("h", n_heads), ("w", d_v), dtype=dtype, fan_in=("k",)),
+        "wo": pspec(("h", n_heads), ("w", d_v), ("m", d_model), dtype=dtype, fan_in=("h", "w")),
+        "q_norm": pspec(("q", q_rank), dtype=dtype, init="ones"),
+        "kv_norm": pspec(("k", kv_rank), dtype=dtype, init="ones"),
+    }
+
+
+# ------------------------------------------------------------------ cores ----
+
+def attention_seq(q, k, v, *, causal: bool = True, impl: str | None = None, block: int = 512,
+                  mixed: bool | None = None):
+    """q (B,H,S,D), k/v (B,G,S,D) — full-sequence blockwise attention."""
+    return ops.flash_attention(q, k, v, causal=causal, impl=impl, bq=block, bk=block, mixed=mixed)
+
+
+def attention_decode(q, k_cache, v_cache, cache_len):
+    """q (B,H,1,D); caches (B,G,S,D); positions >= cache_len are masked.
+
+    Dense streaming attention: reading the whole cache is the roofline
+    minimum for decode; softmax reductions over a sharded cache-seq dim
+    become the distributed flash-decoding merge under GSPMD.
+    """
+    B, Hq, _, D = q.shape
+    _, G, S, _ = k_cache.shape
+    rep = Hq // G
+    # the cache streams stay in their storage dtype (bf16); scores and the
+    # p@v contraction accumulate in f32 — reading the cache IS the decode
+    # roofline term, so it is never widened in HBM
+    qg = q.reshape(B, G, rep, 1, D)
+    s = jnp.einsum("bgrqd,bgsd->bgrqs", qg, k_cache, preferred_element_type=jnp.float32)
+    s = s * (D ** -0.5)
+    # ring-buffer aware: once length exceeds the cache size (windowed cache),
+    # every slot is valid
+    valid = jnp.minimum(cache_len.reshape(B, 1, 1, 1, 1), S)
+    mask = jnp.arange(S)[None, None, None, None, :] < valid
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrqs,bgsd->bgrqd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Hq, 1, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------- GQA op ----
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, G, S, D)
+    v: jax.Array  # (B, G, S, D)
+    length: jax.Array  # (B,) int32
+
+
+def gqa_attention(p, x, *, n_heads: int, n_kv: int, head_dim: int, rope_theta: float = 10000.0,
+                  positions=None, cache: KVCache | None = None, causal: bool = True,
+                  attn_impl: str | None = None, block: int = 512, attn_mixed: bool | None = None):
+    """x (B,S,m) -> (B,S,m).  ``cache`` switches to decode mode (S==1)."""
+    B, S, _ = x.shape
+    q = shard_act(jnp.einsum("bsm,mhd->bhsd", x, p["wq"].astype(x.dtype)), "q")
+    k = shard_act(jnp.einsum("bsm,mgd->bgsd", x, p["wk"].astype(x.dtype)), "kv")
+    v = shard_act(jnp.einsum("bsm,mgd->bgsd", x, p["wv"].astype(x.dtype)), "kv")
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)[None, :, None, :]
+        k = k + p["bk"].astype(x.dtype)[None, :, None, :]
+        v = v + p["bv"].astype(x.dtype)[None, :, None, :]
+    if positions is None:
+        positions = jnp.arange(S)
+    cos, sin = rope_angles(positions, head_dim, rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if cache is not None:
+        kc = shard_act(_cache_update(cache.k, k, cache.length), "cache_kv")
+        vc = shard_act(_cache_update(cache.v, v, cache.length), "cache_kv")
+        new_cache = KVCache(kc, vc, cache.length + S)
+        o = attention_decode(q, kc, vc, cache.length + S)
+        out = jnp.einsum("bhsd,hdm->bsm", o, p["wo"].astype(x.dtype))
+        return shard_act(out, "hidden"), new_cache
+    o = shard_act(attention_seq(q, k, v, causal=causal, impl=attn_impl, block=block, mixed=attn_mixed), "attn_out")
+    return shard_act(jnp.einsum("bhsd,hdm->bsm", o, p["wo"].astype(x.dtype)), "hidden"), None
+
+
+def _cache_update(cache, new, length):
+    """Insert S new steps at position ``length`` (same for all batch rows).
+
+    Writes at ``length % cache_size``: a no-op modulo for full-length caches
+    and ring-buffer semantics for windowed caches (Zamba2 long-context)."""
+    pos = length[0] % cache.shape[2]
+    return jax.lax.dynamic_update_slice(cache, new.astype(cache.dtype), (0, 0, pos, 0))
+
+
+# ---------------------------------------------------------------- MLA op ----
+
+class MLACache(NamedTuple):
+    c: jax.Array  # (B, S, kv_rank) compressed latent
+    kr: jax.Array  # (B, S, d_rope) shared rope key
+    length: jax.Array
+
+
+def _rms(x, w, eps=1e-6):
+    v = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(v + eps)).astype(x.dtype) * w.astype(x.dtype)
+
+
+def mla_attention(p, x, *, n_heads: int, d_nope: int, d_rope: int, d_v: int, rope_theta: float = 10000.0,
+                  positions=None, cache: MLACache | None = None, attn_impl: str | None = None,
+                  block: int = 512, attn_mixed: bool | None = None):
+    """Multi-head Latent Attention (MiniCPM3/DeepSeek-V2 style).
+
+    Train/prefill: decompress per-head K/V and run flash attention.
+    Decode: the *absorbed* form — scores against the compressed latent cache
+    (the cache layout is (B,S,kv_rank)+(B,S,d_rope): 288 instead of
+    2*40*96 = 7680 floats per token — MLA's reason to exist)."""
+    B, S, _ = x.shape
+    cq = _rms(jnp.einsum("bsm,mq->bsq", x, p["wdq"].astype(x.dtype)), p["q_norm"])
+    q = jnp.einsum("bsq,qhc->bhsc", cq, p["wuq"].astype(x.dtype))
+    q_nope, q_rope = q[..., :d_nope], q[..., d_nope:]
+    c = _rms(jnp.einsum("bsm,mk->bsk", x, p["wdkv"].astype(x.dtype)), p["kv_norm"])
+    kr = jnp.einsum("bsm,mr->bsr", x, p["wkr"].astype(x.dtype))
+    if positions is None:
+        positions = jnp.arange(S)
+    cos, sin = rope_angles(positions, d_rope, rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    kr = apply_rope(kr[:, None], cos, sin)[:, 0]  # (B,S,r)
+
+    if cache is None:
+        k_nope = jnp.einsum("bsk,khn->bhsn", c, p["wuk"].astype(x.dtype))
+        v = jnp.einsum("bsk,khw->bhsw", c, p["wuv"].astype(x.dtype))
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(kr[:, None], (B, n_heads, S, d_rope))], axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # v keeps its own head dim (no padding) — both attention impls
+        # support dv != dq, so MLA pays for exactly d_v value bytes
+        o = attention_seq(qq, k, v, causal=True, impl=attn_impl, block=block, mixed=attn_mixed)
+        return jnp.einsum("bhsw,hwm->bsm", o, p["wo"].astype(x.dtype)), None
+
+    # ---- absorbed decode ----
+    cc = shard_act(_seq_cache_update(cache.c, c, cache.length), "cache_mla")
+    krc = shard_act(_seq_cache_update(cache.kr, kr, cache.length), "cache_mla")
+    new_cache = MLACache(cc, krc, cache.length + S)
+    # absorb W_uk into q: q_abs (B,H,1,k_rank)
+    q_abs = jnp.einsum("bhsn,khn->bhsk", q_nope, p["wuk"].astype(x.dtype))
+    scale = (d_nope + d_rope) ** -0.5
+    s = (
+        jnp.einsum("bhsk,btk->bhst", q_abs.astype(jnp.float32), cc.astype(jnp.float32))
+        + jnp.einsum("bhsr,btr->bhst", q_rope.astype(jnp.float32), krc.astype(jnp.float32))
+    ) * scale
+    T = cc.shape[1]
+    mask = jnp.arange(T)[None, None, None, :] < (cache.length + S).reshape(B, 1, 1, 1)
+    s = jnp.where(mask, s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhst,btk->bhsk", pr, cc.astype(jnp.float32)).astype(x.dtype)
+    o = jnp.einsum("bhsk,khw->bhsw", o_lat, p["wuv"].astype(x.dtype))
+    return jnp.einsum("bhsw,hwm->bsm", o, p["wo"].astype(x.dtype)), new_cache
+
+
+def _pad_last(v, d: int):
+    if v.shape[-1] == d:
+        return v
+    pad = [(0, 0)] * (v.ndim - 1) + [(0, d - v.shape[-1])]
+    return jnp.pad(v, pad)
+
+
+def _seq_cache_update(cache, new, length):
+    return jax.lax.dynamic_update_slice(cache, new.astype(cache.dtype), (0, length[0]) + (0,) * (cache.ndim - 2))
+
+
+# ------------------------------------------------------- cross-attention ----
+
+def cross_attn_specs(d_model: int, n_heads: int, n_kv: int, head_dim: int, d_enc: int, dtype=jnp.float32):
+    return {
+        "wq": pspec(("m", d_model), ("h", n_heads), ("d", head_dim), dtype=dtype, fan_in=("m",)),
+        "wk": pspec(("x", d_enc), ("g", n_kv), ("d", head_dim), dtype=dtype, fan_in=("x",)),
+        "wv": pspec(("x", d_enc), ("g", n_kv), ("d", head_dim), dtype=dtype, fan_in=("x",)),
+        "wo": pspec(("h", n_heads), ("d", head_dim), ("m", d_model), dtype=dtype, fan_in=("h", "d")),
+        "q_norm": pspec(("d", head_dim), dtype=dtype, init="ones"),
+        "k_norm": pspec(("d", head_dim), dtype=dtype, init="ones"),
+    }
+
+
+def cross_attention(p, x, enc, *, n_heads: int, n_kv: int, head_dim: int, attn_impl: str | None = None,
+                    block: int = 512, attn_mixed: bool | None = None):
+    """x (B,S,m) attends to encoder states enc (B,T,d_enc); non-causal."""
+    q = jnp.einsum("bsm,mhd->bhsd", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("btx,xgd->bgtd", enc.astype(x.dtype), p["wk"].astype(x.dtype))
+    v = jnp.einsum("btx,xgd->bgtd", enc.astype(x.dtype), p["wv"].astype(x.dtype))
+    q = _rms(q, p["q_norm"])
+    k = _rms(k, p["k_norm"])
+    o = attention_seq(q, k, v, causal=False, impl=attn_impl, block=block, mixed=attn_mixed)
+    return jnp.einsum("bhsd,hdm->bsm", o, p["wo"].astype(x.dtype))

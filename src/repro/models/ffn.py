@@ -1,0 +1,194 @@
+"""Feed-forward family: SwiGLU, GELU MLP, and top-k MoE (with optional
+parallel dense residual branch, for Arctic).
+
+MoE uses a capacity-based scatter dispatch (MegaBlocks-style slotting rather
+than the dense one-hot einsum): tokens are assigned slot = expert*C + pos by
+a running per-expert counter, scatter-added into an (E*C, m) buffer, batched
+through the expert FFNs as (E, C, m), and gathered back with their gates.
+With tokens sharded over ``data`` and experts over ``model``, the
+scatter/gather pair is exactly the paper's layout-agnostic scatter: a
+transfer between two independently laid-out views of the token set.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .module import pspec
+from .sharding import shard_act
+
+# ----------------------------------------------------------------- dense ----
+
+def swiglu_specs(d_model: int, d_ff: int, dtype=jnp.float32):
+    return {
+        "w_gate": pspec(("m", d_model), ("f", d_ff), dtype=dtype, fan_in=("m",)),
+        "w_up": pspec(("m", d_model), ("f", d_ff), dtype=dtype, fan_in=("m",)),
+        "w_down": pspec(("f", d_ff), ("m", d_model), dtype=dtype, fan_in=("f",)),
+    }
+
+
+def swiglu(p, x):
+    g = shard_act(jnp.einsum("bsm,mf->bsf", x, p["w_gate"].astype(x.dtype)), "ffn_h")
+    u = shard_act(jnp.einsum("bsm,mf->bsf", x, p["w_up"].astype(x.dtype)), "ffn_h")
+    h = jax.nn.silu(g) * u
+    return shard_act(jnp.einsum("bsf,fm->bsm", h, p["w_down"].astype(x.dtype)), "hidden")
+
+
+def gelu_mlp_specs(d_model: int, d_ff: int, dtype=jnp.float32):
+    return {
+        "w_in": pspec(("m", d_model), ("f", d_ff), dtype=dtype, fan_in=("m",)),
+        "w_out": pspec(("f", d_ff), ("m", d_model), dtype=dtype, fan_in=("f",)),
+        "b_in": pspec(("f", d_ff), dtype=dtype, init="zeros"),
+        "b_out": pspec(("m", d_model), dtype=dtype, init="zeros"),
+    }
+
+
+def gelu_mlp(p, x):
+    h = shard_act(jnp.einsum("bsm,mf->bsf", x, p["w_in"].astype(x.dtype)) + p["b_in"].astype(x.dtype), "ffn_h")
+    h = jax.nn.gelu(h)
+    return shard_act(jnp.einsum("bsf,fm->bsm", h, p["w_out"].astype(x.dtype)) + p["b_out"].astype(x.dtype), "hidden")
+
+
+# ------------------------------------------------------------------- MoE ----
+
+def moe_specs(d_model: int, d_ff: int, n_experts: int, *, dense_residual: bool = False, dtype=jnp.float32):
+    s = {
+        "router": pspec(("m", d_model), ("e", n_experts), dtype=dtype, scale=0.02),
+        "w_gate": pspec(("e", n_experts), ("m", d_model), ("f", d_ff), dtype=dtype, fan_in=("m",)),
+        "w_up": pspec(("e", n_experts), ("m", d_model), ("f", d_ff), dtype=dtype, fan_in=("m",)),
+        "w_down": pspec(("e", n_experts), ("f", d_ff), ("m", d_model), dtype=dtype, fan_in=("f",)),
+    }
+    if dense_residual:
+        s["residual"] = swiglu_specs(d_model, d_ff, dtype)
+    return s
+
+
+def moe_ffn(p, x, *, n_experts: int, top_k: int = 2, capacity_factor: float = 1.25,
+            aux_loss_weight: float = 0.01, groups: int = 0):
+    """x (B,S,m) -> (y (B,S,m), aux_loss scalar).
+
+    Capacity C = ceil(top_k * T / E * capacity_factor); overflowing tokens
+    are dropped (standard Switch/GShard semantics).  Aux loss is the GShard
+    load-balancing loss.
+
+    ``groups > 1`` switches to grouped dispatch (GShard-style): tokens split
+    into G groups along batch, each with its own capacity and slot counter.
+    With G = the data-parallel degree the running-counter cumsum and the
+    dispatch scatter become shard-local (no cross-``data`` collective); the
+    only cross-device movement left is the expert-parallel exchange (§Perf).
+    """
+    B, S, m = x.shape
+    E = n_experts
+    T = B * S
+    if groups and groups > 1 and S > 1 and B % groups == 0:
+        return _moe_grouped(p, x, n_experts=n_experts, top_k=top_k,
+                            capacity_factor=capacity_factor,
+                            aux_loss_weight=aux_loss_weight, groups=groups)
+    if S == 1:
+        # decode: dropless (C = T lets any routing fit) — serving must not
+        # silently drop tokens; the buffers are tiny at decode batch sizes
+        C = T
+    else:
+        C = int(max(top_k, round(top_k * T / E * capacity_factor)))
+    xt = x.reshape(T, m)
+
+    logits = jnp.einsum("tm,me->te", xt, p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)  # (T, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (GShard): E * sum_e f_e * P_e
+    me = probs.mean(axis=0)  # mean router prob per expert
+    ce = jnp.zeros((E,), jnp.float32).at[gate_idx[:, 0]].add(1.0) / T  # top-1 load
+    aux = E * jnp.sum(me * ce) * aux_loss_weight
+
+    # slot assignment: running per-expert counter over (T, k) choices
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)  # (T, k, E)
+    flat = onehot.reshape(T * top_k, E)
+    pos = jnp.cumsum(flat, axis=0) - flat  # (T*k, E) position before this choice
+    pos = (pos * flat).sum(-1).reshape(T, top_k)  # (T, k)
+    keep = pos < C
+    slot = gate_idx * C + jnp.minimum(pos, C - 1)  # (T, k)
+
+    # dispatch: scatter-add tokens into the (E*C, m) expert buffer
+    buf = jnp.zeros((E * C, m), x.dtype)
+    w = jnp.where(keep, 1.0, 0.0).astype(x.dtype)  # dispatch weight (drop overflow)
+    buf = buf.at[slot.reshape(-1)].add((xt[:, None, :] * w[..., None]).reshape(T * top_k, m))
+    be = shard_act(buf.reshape(E, C, m), "moe_buf")
+
+    # expert FFNs, batched over e
+    g = jnp.einsum("ecm,emf->ecf", be, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("ecm,emf->ecf", be, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    ye = shard_act(jnp.einsum("ecf,efm->ecm", h, p["w_down"].astype(x.dtype)), "moe_buf")  # (E, C, m)
+
+    # combine: gather each choice's slot, weight by gate
+    yt = ye.reshape(E * C, m)[slot.reshape(-1)].reshape(T, top_k, m)
+    comb = (gate_vals.astype(x.dtype) * w)[..., None]
+    y = (yt * comb).sum(axis=1).reshape(B, S, m)
+
+    if "residual" in p:
+        y = y + swiglu(p["residual"], x)
+    return y, aux
+
+
+def _moe_grouped(p, x, *, n_experts: int, top_k: int, capacity_factor: float,
+                 aux_loss_weight: float, groups: int):
+    """Grouped-dispatch MoE: per-group capacity, shard-local slot assignment.
+
+    Shapes: tokens (G, Tg, m); buffers (G, E, Cg, m).  The buffer keeps G on
+    the batch/data axes (recipe kind 'moe_buf_g'), so the scatter-add that
+    builds it is local to each data shard; experts then run batched over
+    (G, E) with expert weights sharded over ``model``.
+    """
+    B, S, m = x.shape
+    E = n_experts
+    G = groups
+    T = B * S
+    Tg = T // G
+    Cg = int(max(top_k, round(top_k * Tg / E * capacity_factor)))
+    xg = x.reshape(G, Tg, m)
+
+    logits = jnp.einsum("gtm,me->gte", xg, p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, Tg, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)  # (G, Tg, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux loss over the whole batch (same statistic as ungrouped)
+    me = probs.reshape(T, E).mean(axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[gate_idx[..., 0].reshape(-1)].add(1.0) / T
+    aux = E * jnp.sum(me * ce) * aux_loss_weight
+
+    # per-group slot assignment: cumsum runs over Tg only (shard-local)
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)  # (G, Tg, k, E)
+    flat = onehot.reshape(G, Tg * top_k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat
+    pos = (pos * flat).sum(-1).reshape(G, Tg, top_k)
+    keep = pos < Cg
+    slot = gate_idx * Cg + jnp.minimum(pos, Cg - 1)  # (G, Tg, k)
+
+    w = jnp.where(keep, 1.0, 0.0).astype(x.dtype)
+    contrib = (xg[:, :, None, :] * w[..., None]).reshape(G, Tg * top_k, m)
+
+    def scatter_group(buf_rows, slots, vals):
+        return buf_rows.at[slots].add(vals)
+
+    buf = jax.vmap(scatter_group)(
+        jnp.zeros((G, E * Cg, m), x.dtype), slot.reshape(G, Tg * top_k), contrib
+    )
+    be = shard_act(buf.reshape(G, E, Cg, m), "moe_buf_g")
+
+    g_h = jnp.einsum("gecm,emf->gecf", be, p["w_gate"].astype(x.dtype))
+    u_h = jnp.einsum("gecm,emf->gecf", be, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g_h) * u_h
+    ye = shard_act(jnp.einsum("gecf,efm->gecm", h, p["w_down"].astype(x.dtype)), "moe_buf_g")
+
+    yt = jax.vmap(lambda rows, slots: rows[slots])(
+        ye.reshape(G, E * Cg, m), slot.reshape(G, Tg * top_k)
+    ).reshape(G, Tg, top_k, m)
+    comb = (gate_vals.astype(x.dtype) * w)[..., None]
+    y = (yt * comb).sum(axis=2).reshape(B, S, m)
+
+    if "residual" in p:
+        y = y + swiglu(p["residual"], x)
+    return y, aux

@@ -1,0 +1,370 @@
+"""The full language model: embeddings -> block stack -> head, for all ten
+assigned architectures, plus train/prefill/decode entry points.
+
+Design notes:
+  * ``lax.scan`` over stacked layer params everywhere (O(1) HLO in depth);
+  * heterogeneous stacks (VLM cross-attn every 5th layer, Zamba2 shared
+    block every 6th) scan over *super-blocks*;
+  * caches/states are pytrees stacked along the layer dim and carried by the
+    same scans;
+  * activation sharding comes from the recipe context (see sharding.py);
+  * remat: ``cfg.remat='block'`` checkpoints each block's activations.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention as attn_mod
+from . import blocks as blk
+from . import ssm as ssm_mod
+from .module import pspec, stack_specs, init_params, abstract_params, tree_size
+from .sharding import shard_act
+
+# ================================================================= specs ====
+
+def build_specs(cfg) -> dict:
+    dt = cfg.param_dtype
+    specs: dict[str, Any] = {}
+    if cfg.input_kind in ("tokens", "tokens+image"):
+        specs["embed"] = pspec(("v", cfg.vocab_padded), ("m", cfg.d_model), dtype=dt, init="embed")
+    specs["final_norm"] = blk.norm_spec(cfg.d_model, dt)
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = pspec(("m", cfg.d_model), ("v", cfg.vocab_padded), dtype=dt, fan_in=("m",))
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "audio"):
+        specs["blocks"] = stack_specs(blk.attn_block_specs(cfg), cfg.n_layers)
+    elif fam == "mla":
+        specs["blocks"] = stack_specs(blk.mla_block_specs(cfg), cfg.n_layers)
+    elif fam == "vlm":
+        n_cross = cfg.n_layers // cfg.cross_every
+        n_self = cfg.n_layers - n_cross
+        group_self = cfg.cross_every - 1
+        assert n_self == n_cross * group_self, (n_self, n_cross)
+        specs["self_blocks"] = stack_specs(
+            stack_specs(blk.attn_block_specs(cfg), group_self, dim="l2"), n_cross
+        )
+        specs["cross_blocks"] = stack_specs(blk.cross_block_specs(cfg), n_cross)
+    elif fam == "ssm":
+        specs["blocks"] = stack_specs(blk.rwkv_block_specs(cfg), cfg.n_layers)
+    elif fam == "hybrid":
+        n_shared = cfg.n_layers // cfg.shared_every
+        n_mamba = cfg.n_layers - n_shared
+        group_m = cfg.shared_every - 1
+        n_tail = n_mamba - n_shared * group_m
+        specs["mamba_blocks"] = stack_specs(
+            stack_specs(blk.mamba_block_specs(cfg), group_m, dim="l2"), n_shared
+        )
+        if n_tail:
+            specs["tail_blocks"] = stack_specs(blk.mamba_block_specs(cfg), n_tail)
+        specs["shared_block"] = blk.shared_attn_block_specs(cfg)
+        specs["shared_lora"] = stack_specs(blk.shared_lora_specs(cfg, cfg.shared_lora_rank), n_shared)
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+    return specs
+
+
+def count_params(cfg, *, active_only: bool = False) -> int:
+    """Total (or MoE-active) parameter count."""
+    n = tree_size(build_specs(cfg))
+    if active_only and cfg.n_experts:
+        # subtract inactive experts' weights
+        per_expert = 3 * cfg.d_model * cfg.d_ff  # gate/up/down
+        inactive = (cfg.n_experts - cfg.moe_top_k) * per_expert * cfg.n_layers
+        n -= inactive
+    return int(n)
+
+
+# ============================================================= embeddings ====
+
+def _sinusoidal(positions, d: int):
+    half = d // 2
+    freq = jnp.exp(-np.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def embed_inputs(params, batch, cfg, *, positions=None):
+    """batch -> (B, S, m) activations in cfg.act_dtype."""
+    if cfg.input_kind == "embeds":
+        x = batch["embeds"].astype(cfg.act_dtype)
+        S = x.shape[1]
+        pos = positions if positions is not None else jnp.arange(S)
+        x = x + _sinusoidal(pos, cfg.d_model).astype(cfg.act_dtype)[None]
+        return shard_act(x, "hidden")
+    tokens = shard_act(batch["tokens"], "tokens")
+    x = params["embed"].astype(cfg.act_dtype)[tokens]
+    return shard_act(x, "hidden")
+
+
+def lm_logits(params, x, cfg):
+    x = blk.rmsnorm(params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsm,mv->bsv", x, head.astype(x.dtype))
+    return shard_act(logits, "logits")
+
+
+# ============================================================ block stacks ====
+
+def _maybe_remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat == "block" else fn
+
+
+def _scan_stack(block_fn, stacked, x, cfg, carry_extra=None):
+    """Scan a homogeneous stack. block_fn(p_layer, x) -> (x, aux)."""
+
+    def body(carry, p_layer):
+        x, aux = carry
+        x, a = block_fn(p_layer, x)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(_maybe_remat(body, cfg), (x, jnp.zeros((), jnp.float32)), stacked)
+    return x, aux
+
+
+def forward(params, batch, cfg, *, positions=None):
+    """Full-sequence forward (train / prefill without cache). Returns
+    (logits, aux_loss)."""
+    x = embed_inputs(params, batch, cfg, positions=positions)
+    fam = cfg.family
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if fam in ("dense", "moe", "audio"):
+        fn = lambda p, x: _drop_cache(blk.attn_block(p, x, cfg, positions=positions))
+        x, aux_total = _scan_stack(fn, params["blocks"], x, cfg)
+    elif fam == "mla":
+        fn = lambda p, x: _drop_cache(blk.mla_block(p, x, cfg, positions=positions))
+        x, aux_total = _scan_stack(fn, params["blocks"], x, cfg)
+    elif fam == "vlm":
+        enc = shard_act(batch["image_embeds"], "enc")
+
+        def group(carry, ps):
+            x, aux = carry
+            p_self, p_cross = ps
+            fn = lambda p, x: _drop_cache(blk.attn_block(p, x, cfg, positions=positions))
+            x, a = _scan_stack(fn, p_self, x, cfg)
+            x = blk.cross_block(p_cross, x, enc, cfg)
+            return (x, aux + a), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            _maybe_remat(group, cfg), (x, aux_total), (params["self_blocks"], params["cross_blocks"])
+        )
+    elif fam == "ssm":
+        fn = lambda p, x: _drop_cache(blk.rwkv_block(p, x, cfg))
+        x, aux_total = _scan_stack(fn, params["blocks"], x, cfg)
+    elif fam == "hybrid":
+        def group(carry, ps):
+            x, aux = carry
+            p_mamba, p_lora = ps
+            fn = lambda p, x: _drop_cache(blk.mamba_block(p, x, cfg))
+            x, a = _scan_stack(fn, p_mamba, x, cfg)
+            x, _, a2 = blk.shared_attn_block(params["shared_block"], p_lora, x, cfg, positions=positions)
+            return (x, aux + a + a2), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            _maybe_remat(group, cfg), (x, aux_total), (params["mamba_blocks"], params["shared_lora"])
+        )
+        if "tail_blocks" in params:
+            fn = lambda p, x: _drop_cache(blk.mamba_block(p, x, cfg))
+            x, a = _scan_stack(fn, params["tail_blocks"], x, cfg)
+            aux_total = aux_total + a
+    else:
+        raise ValueError(fam)
+    return lm_logits(params, x, cfg), aux_total
+
+
+def _drop_cache(out):
+    x, _cache, aux = out
+    return x, aux
+
+
+# ================================================================== loss ====
+
+def loss_fn(params, batch, cfg):
+    """Next-token cross-entropy (+ MoE aux). Returns (loss, metrics)."""
+    logits, aux = forward(params, batch, cfg)
+    labels = batch["labels"]  # (B, S) already shifted by the pipeline
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    nll = ((logz - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    loss = nll + aux
+    return loss, {"nll": nll, "aux": aux, "ppl_proxy": jnp.exp(jnp.minimum(nll, 20.0))}
+
+
+# ================================================================ caching ====
+
+class DecodeState(NamedTuple):
+    caches: Any  # pytree of per-layer caches, stacked on the layer dim
+    positions: jax.Array  # (B,) next position
+
+
+def init_cache(cfg, batch_size: int, max_len: int):
+    """Stacked per-layer cache pytree in act_dtype (layout-recipe sharded)."""
+    B, S = batch_size, max_len
+    dt = cfg.act_dtype
+    zero_len = jnp.zeros((B,), jnp.int32)
+    fam = cfg.family
+
+    def kv(n_layers, G=None, D=None):
+        G = G or cfg.n_kv
+        D = D or cfg.head_dim
+        return attn_mod.KVCache(
+            k=jnp.zeros((n_layers, B, G, S, D), dt),
+            v=jnp.zeros((n_layers, B, G, S, D), dt),
+            length=jnp.tile(zero_len, (n_layers, 1)),
+        )
+
+    if fam in ("dense", "moe", "audio"):
+        return kv(cfg.n_layers)
+    if fam == "mla":
+        return attn_mod.MLACache(
+            c=jnp.zeros((cfg.n_layers, B, S, cfg.mla_kv_rank), dt),
+            kr=jnp.zeros((cfg.n_layers, B, S, cfg.mla_d_rope), dt),
+            length=jnp.tile(zero_len, (cfg.n_layers, 1)),
+        )
+    if fam == "vlm":
+        n_cross = cfg.n_layers // cfg.cross_every
+        group_self = cfg.cross_every - 1
+        return {"self": jax.tree.map(lambda x: x.reshape((n_cross, group_self) + x.shape[1:]), kv(n_cross * group_self))}
+    if fam == "ssm":
+        H = cfg.n_heads
+        hd = cfg.d_model // H
+        return blk.RWKVBlockState(
+            time=ssm_mod.RWKVState(
+                wkv=jnp.zeros((cfg.n_layers, B, H, hd, hd), jnp.float32),
+                shift=jnp.zeros((cfg.n_layers, B, cfg.d_model), dt),
+            ),
+            cm_shift=jnp.zeros((cfg.n_layers, B, cfg.d_model), dt),
+        )
+    if fam == "hybrid":
+        n_shared = cfg.n_layers // cfg.shared_every
+        group_m = cfg.shared_every - 1
+        n_tail = cfg.n_layers - n_shared - n_shared * group_m
+        d_inner = cfg.ssm_expand * cfg.d_model
+        H = d_inner // cfg.ssm_head_dim
+        conv_ch = d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        Sw = min(S, cfg.shared_window) if S > cfg.shared_window else S
+
+        def mstate(n):
+            return ssm_mod.MambaState(
+                ssm=jnp.zeros((n, B, H, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+                conv=jnp.zeros((n, B, 3, conv_ch), dt),
+            )
+
+        out = {
+            "mamba": jax.tree.map(
+                lambda x: x.reshape((n_shared, group_m) + x.shape[1:]), mstate(n_shared * group_m)
+            ),
+            "shared": attn_mod.KVCache(
+                k=jnp.zeros((n_shared, B, cfg.n_kv, Sw, cfg.head_dim), dt),
+                v=jnp.zeros((n_shared, B, cfg.n_kv, Sw, cfg.head_dim), dt),
+                length=jnp.tile(zero_len, (n_shared, 1)),
+            ),
+        }
+        if n_tail:
+            out["tail"] = mstate(n_tail)
+        return out
+    raise ValueError(fam)
+
+
+def decode_step(params, state: DecodeState, batch, cfg):
+    """One serve step: embed the new token(s), run all blocks against the
+    caches, return (logits, new DecodeState).  ``batch['tokens']`` (B, 1)
+    (or ``batch['embeds']`` (B, 1, m) for the audio family)."""
+    positions = state.positions
+    x = embed_inputs(params, batch, cfg, positions=positions[:1])
+    fam = cfg.family
+    caches = state.caches
+
+    if fam in ("dense", "moe", "audio"):
+        def body(x, layer):
+            p, c = layer
+            x, new_c, _ = blk.attn_block(p, x, cfg, cache=c, positions=positions[:1])
+            return x, new_c
+
+        x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    elif fam == "mla":
+        def body(x, layer):
+            p, c = layer
+            x, new_c, _ = blk.mla_block(p, x, cfg, cache=c, positions=positions[:1])
+            return x, new_c
+
+        x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    elif fam == "vlm":
+        enc = shard_act(batch["image_embeds"], "enc")
+
+        def group(x, layer):
+            (p_self, p_cross), c_self = layer
+
+            def body(x, sl):
+                p, c = sl
+                x, new_c, _ = blk.attn_block(p, x, cfg, cache=c, positions=positions[:1])
+                return x, new_c
+
+            x, new_c_self = jax.lax.scan(body, x, (p_self, c_self))
+            x = blk.cross_block(p_cross, x, enc, cfg)
+            return x, new_c_self
+
+        x, new_self = jax.lax.scan(
+            group, x, ((params["self_blocks"], params["cross_blocks"]), caches["self"])
+        )
+        new_caches = {"self": new_self}
+    elif fam == "ssm":
+        def body(x, layer):
+            p, c = layer
+            x, new_c, _ = blk.rwkv_block(p, x, cfg, state=c)
+            return x, new_c
+
+        x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    elif fam == "hybrid":
+        def group(x, layer):
+            (p_mamba, p_lora), (c_mamba, c_shared) = layer
+
+            def body(x, ml):
+                p, c = ml
+                x, new_c, _ = blk.mamba_block(p, x, cfg, state=c)
+                return x, new_c
+
+            x, new_c_mamba = jax.lax.scan(body, x, (p_mamba, c_mamba))
+            x, new_c_shared, _ = blk.shared_attn_block(
+                params["shared_block"], p_lora, x, cfg, cache=c_shared,
+                positions=positions[:1], window=cfg.shared_window,
+            )
+            return x, (new_c_mamba, new_c_shared)
+
+        x, (new_mamba, new_shared) = jax.lax.scan(
+            group, x,
+            ((params["mamba_blocks"], params["shared_lora"]), (caches["mamba"], caches["shared"])),
+        )
+        new_caches = {"mamba": new_mamba, "shared": new_shared}
+        if "tail" in caches:
+            def body(x, ml):
+                p, c = ml
+                x, new_c, _ = blk.mamba_block(p, x, cfg, state=c)
+                return x, new_c
+
+            x, new_tail = jax.lax.scan(body, x, (params["tail_blocks"], caches["tail"]))
+            new_caches["tail"] = new_tail
+    else:
+        raise ValueError(fam)
+
+    logits = lm_logits(params, x, cfg)
+    return logits, DecodeState(caches=new_caches, positions=positions + x.shape[1])
+
+
+# =============================================================== helpers ====
+
+def init_model(cfg, key):
+    return init_params(build_specs(cfg), key)
+
+
+def abstract_model(cfg):
+    return abstract_params(build_specs(cfg))

@@ -1,0 +1,125 @@
+"""Parameter substrate: every model weight is declared through the layout
+algebra (a :class:`~repro.core.Layout` + named-dim -> mesh-axis bindings).
+
+This is where the paper's technique becomes first-class in the LM framework:
+model code never writes a PartitionSpec — it declares logical dims
+(``m``=d_model, ``f``=d_ff, ``h``=heads, ``v``=vocab, ``e``=experts,
+``l``=layers, ...) and a *sharding recipe* binds dims to mesh axes.  Changing
+the recipe (the §Perf hillclimb lever) re-derives every sharding, exactly
+like re-binding a Noarr MPI traverser.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.layout import Layout, scalar, vector
+from repro.core.dist import named_sharding, partition_spec
+
+__all__ = ["ParamSpec", "pspec", "init_params", "param_shardings", "param_pspecs", "stack_specs", "tree_size"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative weight: layout (named dims, physical order) + init law."""
+
+    layout: Layout
+    init: str = "normal"  # 'normal' | 'zeros' | 'ones' | 'embed'
+    scale: float | None = None  # stddev override for 'normal'
+    fan_in_dims: tuple[str, ...] = ()  # dims whose product is fan-in (default: all but last)
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return self.layout.shape
+
+    @property
+    def dtype(self):
+        return self.layout.dtype
+
+    def initialize(self, key) -> jax.Array:
+        shape, dtype = self.shape, self.dtype
+        if self.init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(shape, dtype)
+        if self.init == "embed":
+            return jax.random.normal(key, shape, dtype) * (self.scale or 0.02)
+        # truncated-normal fan-in init
+        if self.scale is not None:
+            std = self.scale
+        else:
+            if self.fan_in_dims:
+                fan_in = int(np.prod([self.layout.dim_size(d) for d in self.fan_in_dims]))
+            else:
+                fan_in = int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+            std = fan_in ** -0.5
+        return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def pspec(*dims: tuple[str, int], dtype=jnp.float32, init: str = "normal", scale: float | None = None,
+          fan_in: tuple[str, ...] = ()) -> ParamSpec:
+    """``pspec(('m', 3072), ('f', 8192))`` — dims listed outer..inner.
+
+    The physical axis order equals the listed order (first dim outermost),
+    i.e. the buffer is ``shape = (sizes...)`` row-major — and can be retuned
+    later purely through the layout, without touching model code.
+    """
+    layout = scalar(dtype)
+    for name, size in reversed(dims):  # vector() prepends: apply inner first
+        layout = layout ^ vector(name, int(size))
+    return ParamSpec(layout=layout, init=init, scale=scale, fan_in_dims=tuple(fan_in))
+
+
+def stack_specs(tree, num: int, dim: str = "l"):
+    """Add a leading stacked-layer dim to every spec (scan-over-layers)."""
+
+    def add(spec: ParamSpec) -> ParamSpec:
+        return dataclasses.replace(spec, layout=spec.layout ^ vector(dim, num))
+
+    return jax.tree.map(add, tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def init_params(tree, key):
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [s.initialize(k) for s, k in zip(leaves, keys)])
+
+
+def param_pspecs(tree, bindings: Mapping[str, Any], priority=None):
+    """PartitionSpec pytree derived from each weight's layout + the recipe's
+    dim->mesh-axis bindings (the automatic-datatype analogue)."""
+    return jax.tree.map(
+        lambda s: partition_spec(s.layout, bindings, priority=priority),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def param_shardings(tree, mesh, bindings: Mapping[str, Any], priority=None):
+    return jax.tree.map(
+        lambda s: named_sharding(mesh, s.layout, bindings, priority=priority),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def abstract_params(tree):
+    """ShapeDtypeStruct pytree (for dry-run lowering without allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def tree_size(tree) -> int:
+    """Total element count of a spec/array pytree."""
+    def count(x):
+        if isinstance(x, ParamSpec):
+            return int(np.prod(x.shape))
+        return int(np.prod(x.shape))
+    return sum(count(l) for l in jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, ParamSpec)))

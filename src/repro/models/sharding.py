@@ -1,0 +1,256 @@
+"""Sharding recipes: binding the model's named dims to mesh axes.
+
+This is the LM-stack incarnation of the paper's MPI traverser: the user (or
+the autotuner) *binds dims*; every PartitionSpec — parameters, activations,
+KV caches, SSM states, MoE buffers — is derived.  Changing a recipe (e.g.
+moving the KV cache's sharded dim from ``seq`` to ``kv-heads``) is the §Perf
+hillclimb lever and needs no model-code changes, exactly like re-tuning a
+tile layout in Noarr-MPI.
+
+Two attention modes:
+  * ``tp``: query heads sharded over ``model`` (needs n_heads % model == 0);
+  * ``sp``: sequence sharded over ``model`` for attention (any head count),
+    Megatron-SP-style boundary reshards handled by GSPMD.
+
+Activation constraints are applied through a context (``use_recipe``) so
+model code stays mesh-free; ``shard_act(x, kind)`` is a no-op outside it.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Mapping
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["Recipe", "make_recipe", "use_recipe", "shard_act", "current_recipe"]
+
+# priority for param-dim conflicts (earlier wins a contested mesh axis)
+PRIORITY = ["e", "v", "f", "h", "a", "i", "c", "g", "q", "k", "m", "l"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Recipe:
+    mesh: Mesh
+    bindings: dict[str, Any]  # param dim -> mesh axis (None = replicate)
+    act_specs: dict[str, P]  # activation kind -> PartitionSpec
+    attn_mode: str  # 'tp' | 'sp'
+    batch_axes: tuple[str, ...]
+
+    def param_shardings(self, spec_tree):
+        from .module import param_shardings
+
+        return param_shardings(spec_tree, self.mesh, self.bindings, priority=PRIORITY)
+
+    def param_pspecs(self, spec_tree):
+        from .module import param_pspecs
+
+        return param_pspecs(spec_tree, self.bindings, priority=PRIORITY)
+
+    def spec(self, kind: str) -> P | None:
+        return self.act_specs.get(kind)
+
+
+def _div(n: int, mesh: Mesh, axis: str) -> bool:
+    return n % mesh.shape[axis] == 0
+
+
+def make_recipe(cfg, mesh: Mesh, *, attn_mode: str = "auto",
+                overrides: Mapping[str, Any] | None = None,
+                act_overrides: Mapping[str, P] | None = None) -> Recipe:
+    """Derive the standard FSDP(data) x TP/SP(model) recipe for ``cfg``.
+
+    * weights: ``m`` (d_model) sharded over ``data`` (FSDP / ZeRO-3 style),
+      ``f``/``v``/``e``/heads over ``model`` (TP), with divisibility guards;
+    * batch over ``data`` (and ``pod`` when present: pure DP across pods);
+    * attention: ``tp`` when the head count divides the model axis, else
+      ``sp`` (sequence parallel).
+    """
+    axes = set(mesh.axis_names)
+    model_ax = "model" if "model" in axes else None
+    batch_axes = tuple(a for a in ("pod", "data") if a in axes)
+    B = batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None)
+    msize = mesh.shape[model_ax] if model_ax else 1
+
+    if attn_mode == "auto":
+        attn_mode = "tp" if (model_ax and cfg.n_heads % msize == 0) else "sp"
+
+    bind: dict[str, Any] = {}
+    if model_ax:
+        def mbind(dim: str, size: int):
+            if size % msize == 0:
+                bind[dim] = model_ax
+
+        mbind("v", cfg.vocab_padded)
+        mbind("f", cfg.d_ff)
+        if cfg.n_experts:
+            mbind("e", cfg.n_experts)
+        if attn_mode == "tp":
+            mbind("h", cfg.n_heads)
+            mbind("g", cfg.n_kv)
+        if cfg.family == "ssm":
+            mbind("a", cfg.d_model)
+        if cfg.family == "hybrid":
+            d_inner = cfg.ssm_expand * cfg.d_model
+            mbind("i", 2 * d_inner + 2 * cfg.ssm_groups * cfg.ssm_state + d_inner // cfg.ssm_head_dim)
+            # ('i' also appears sized d_inner on norm_w/w_out; both divide when d_inner does)
+            if d_inner % msize or (d_inner + 2 * cfg.ssm_groups * cfg.ssm_state) % msize:
+                bind.pop("i", None)
+            mbind("c", d_inner + 2 * cfg.ssm_groups * cfg.ssm_state)
+    # FSDP: d_model over data
+    if "data" in axes and cfg.d_model % mesh.shape["data"] == 0:
+        bind["m"] = "data"
+    bind.update(overrides or {})
+
+    mp = model_ax
+    g_div = model_ax and cfg.n_kv % msize == 0
+    h_div = model_ax and cfg.n_heads % msize == 0
+    sp = attn_mode == "sp"
+
+    act: dict[str, P] = {
+        "tokens": P(B, None),
+        "hidden": P(B, None, None),
+        "logits": P(B, None, mp),
+        # attention internals (b, h|g, s, d)
+        "q": P(B, mp, None, None) if (not sp and h_div) else P(B, None, mp if sp else None, None),
+        "kv": P(B, mp, None, None) if (not sp and g_div) else P(B, None, None, None),
+        "attn_out": P(B, mp, None, None) if (not sp and h_div) else P(B, None, mp if sp else None, None),
+        # ffn hidden (b, s, f)
+        "ffn_h": P(B, None, mp if (cfg.d_ff % max(msize, 1) == 0) else None),
+        # decode KV cache (b, g, s, d): prefer heads when they divide, else seq
+        "cache_kv": P(B, mp, None, None) if g_div else P(B, None, mp, None),
+        # MLA latent cache (b, s, k_rank)
+        "cache_mla": P(B, mp, None),
+        # MoE (e, c, m) buffer + (t, m) token buffer
+        "moe_buf": P(mp, None, None) if (cfg.n_experts and cfg.n_experts % max(msize, 1) == 0) else P(None, None, None),
+        # grouped buffer (G, E, Cg, m): groups follow the batch/data axes
+        "moe_buf_g": P(B, mp, None, None) if (cfg.n_experts and cfg.n_experts % max(msize, 1) == 0) else P(B, None, None, None),
+        "moe_tok": P(B, None),
+        # SSM states
+        "state_rwkv": P(B, mp, None, None) if (cfg.n_heads % max(msize, 1) == 0) else P(B, None, None, mp),
+        "state_mamba": P(B, mp, None, None),
+        # vision / audio encoder stream (b, t, d_enc)
+        "enc": P(B, None, None),
+    }
+    if cfg.family == "hybrid" and model_ax:
+        d_inner = cfg.ssm_expand * cfg.d_model
+        H = d_inner // cfg.ssm_head_dim
+        if H % msize:
+            act["state_mamba"] = P(B, None, mp, None)
+    act.update(act_overrides or {})
+    return Recipe(mesh=mesh, bindings=bind, act_specs=act, attn_mode=attn_mode, batch_axes=batch_axes)
+
+
+# --------------------------------------------------- input/state shardings ----
+
+def _fit_spec(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Drop spec entries whose mesh-axis product does not divide the dim
+    (e.g. batch=1 cells can't shard batch over data=16)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        div = 1
+        for a in axes:
+            div *= mesh.shape[a]
+        out.append(entry if dim % div == 0 else None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+def batch_shardings(recipe: Recipe, batch_abs):
+    """NamedSharding pytree for a batch dict (tokens/labels/embeds/images)."""
+    m = recipe.mesh
+
+    def one(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("tokens", "labels", "loss_mask"):
+            spec = recipe.spec("tokens")
+        elif name == "embeds":
+            spec = recipe.spec("hidden")
+        elif name == "image_embeds":
+            spec = recipe.spec("enc")
+        else:
+            spec = P()
+        spec = _fit_spec(spec if spec is not None else P(), tuple(leaf.shape), m)
+        return NamedSharding(m, spec)
+
+    return jax.tree_util.tree_map_with_path(one, batch_abs)
+
+
+def decode_state_shardings(recipe: Recipe, state_abs):
+    """NamedSharding pytree for a DecodeState (stacked per-layer caches).
+
+    Leading stack dims (layer / super-block grouping) replicate; the
+    trailing dims take the recipe's cache/state specs — this is where the
+    tunable cache layout (seq- vs head-sharded) lands on the real buffers.
+    """
+    m = recipe.mesh
+
+    def lead_pad(spec: P, ndim: int) -> P:
+        pad = ndim - len(spec)
+        return P(*([None] * pad), *spec)
+
+    def one(path, leaf):
+        name = path[-1].name if hasattr(path[-1], "name") else (
+            path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        )
+        nd = len(leaf.shape)
+        if name in ("k", "v"):
+            spec = lead_pad(recipe.spec("cache_kv"), nd)
+        elif name in ("c", "kr"):
+            spec = lead_pad(recipe.spec("cache_mla"), nd)
+        elif name == "wkv":
+            spec = lead_pad(recipe.spec("state_rwkv"), nd)
+        elif name == "ssm":
+            spec = lead_pad(recipe.spec("state_mamba"), nd)
+        elif name in ("shift", "cm_shift"):
+            spec = lead_pad(P(recipe.batch_axes if len(recipe.batch_axes) > 1 else (recipe.batch_axes[0] if recipe.batch_axes else None), None), nd)
+        elif name == "conv":
+            spec = lead_pad(P(recipe.batch_axes if len(recipe.batch_axes) > 1 else (recipe.batch_axes[0] if recipe.batch_axes else None), None, None), nd)
+        else:  # length, positions, counters
+            spec = P()
+        spec = _fit_spec(spec, tuple(leaf.shape), m)
+        return NamedSharding(m, spec)
+
+    return jax.tree_util.tree_map_with_path(one, state_abs)
+
+
+# ------------------------------------------------------------- context ----
+
+_CURRENT: list[Recipe] = []
+
+
+@contextlib.contextmanager
+def use_recipe(recipe: Recipe | None):
+    if recipe is None:
+        yield
+        return
+    _CURRENT.append(recipe)
+    try:
+        yield
+    finally:
+        _CURRENT.pop()
+
+
+def current_recipe() -> Recipe | None:
+    return _CURRENT[-1] if _CURRENT else None
+
+
+def shard_act(x, kind: str):
+    """Constrain an activation's sharding per the active recipe (no-op when
+    no recipe is active, e.g. single-device tests)."""
+    r = current_recipe()
+    if r is None:
+        return x
+    spec = r.spec(kind)
+    if spec is None:
+        return x
+    if x.ndim < len(spec):
+        return x  # shape variant (e.g. flattened) — skip rather than guess
+    spec = _fit_spec(spec, tuple(x.shape), r.mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(r.mesh, spec))

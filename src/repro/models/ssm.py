@@ -1,0 +1,262 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) and Mamba2 (SSD).
+
+Both use the *chunked* linear-attention formulation (the TPU-native
+adaptation of the papers' CUDA scan kernels): the sequence is split into
+chunks of L tokens; within a chunk everything is dense matmuls (MXU
+friendly), across chunks a ``lax.scan`` carries the recurrent state.  This
+gives O(S·L) work with L-wide matmuls instead of a length-S scalar scan.
+
+Decode mode is the exact O(1) recurrence step against a cached state —
+states are layout-declared pytrees, so their sharding comes from the same
+recipe machinery as the KV cache.
+
+Numerics (RWKV6): decays are carried in log space; within-chunk factors are
+clamped to exp(±30) — contributions beyond that are < 1e-13 relative and the
+clamp errs toward zero.  Mamba2's per-head scalar decay keeps every factor
+<= 1, needing no clamp.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .module import pspec
+
+# ================================================================= RWKV6 ====
+
+def rwkv6_specs(d_model: int, n_heads: int, *, decay_rank: int = 64, mix_rank: int = 32, dtype=jnp.float32):
+    d = d_model
+    hd = d // n_heads
+    return {
+        # token-shift mixing coefficients (one per stream r,k,v,g,w)
+        "mix": pspec(("p", 5), ("m", d), dtype=dtype, init="zeros"),
+        "wr": pspec(("m", d), ("a", d), dtype=dtype, fan_in=("m",)),
+        "wk": pspec(("m", d), ("a", d), dtype=dtype, fan_in=("m",)),
+        "wv": pspec(("m", d), ("a", d), dtype=dtype, fan_in=("m",)),
+        "wg": pspec(("m", d), ("a", d), dtype=dtype, fan_in=("m",)),
+        "wo": pspec(("a", d), ("m", d), dtype=dtype, fan_in=("a",)),
+        # data-dependent decay: w_t = exp(-exp(w0 + tanh(x A) B))
+        "w0": pspec(("a", d), dtype=dtype, init="zeros", scale=None),
+        "wA": pspec(("m", d), ("r", decay_rank), dtype=dtype, fan_in=("m",)),
+        "wB": pspec(("r", decay_rank), ("a", d), dtype=dtype, scale=0.01),
+        "u": pspec(("a", d), dtype=dtype, init="zeros"),  # bonus, per channel
+        "ln_w": pspec(("a", d), dtype=dtype, init="ones"),  # group-norm weight
+    }
+
+
+class RWKVState(NamedTuple):
+    wkv: jax.Array  # (B, H, K, V) matrix state
+    shift: jax.Array  # (B, m) previous token's input
+
+
+def _rwkv_streams(p, x, x_prev):
+    """Token-shift interpolation + projections. x (B,L,m), x_prev (B,L,m)."""
+    mix = p["mix"].astype(x.dtype)  # (5, m)
+    xs = [x + (x_prev - x) * mix[i] for i in range(5)]
+    r = jnp.einsum("blm,ma->bla", xs[0], p["wr"].astype(x.dtype))
+    k = jnp.einsum("blm,ma->bla", xs[1], p["wk"].astype(x.dtype))
+    v = jnp.einsum("blm,ma->bla", xs[2], p["wv"].astype(x.dtype))
+    g = jnp.einsum("blm,ma->bla", xs[3], p["wg"].astype(x.dtype))
+    dlow = jnp.tanh(jnp.einsum("blm,mr->blr", xs[4], p["wA"].astype(x.dtype)))
+    logw = -jnp.exp(
+        (p["w0"].astype(jnp.float32) + jnp.einsum("blr,ra->bla", dlow, p["wB"].astype(x.dtype)).astype(jnp.float32))
+    )  # (B,L,a) in (-inf, 0)
+    return r, k, v, g, logw
+
+
+def _heads(x, H):
+    B, L, A = x.shape
+    return x.reshape(B, L, H, A // H).transpose(0, 2, 1, 3)  # (B,H,L,hd)
+
+
+def rwkv6_mix(p, x, *, n_heads: int, chunk: int = 64, state: RWKVState | None = None):
+    """x (B,S,m) -> (y, new_state).  state!=None => decode (S small, exact scan)."""
+    B, S, m = x.shape
+    H = n_heads
+    hd = m // H
+    if state is not None:
+        x_prev = jnp.concatenate([state.shift[:, None], x[:, :-1]], axis=1)
+    else:
+        x_prev = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+    r, k, v, g, logw = _rwkv_streams(p, x, x_prev)
+    u = p["u"].astype(jnp.float32).reshape(H, hd)
+    rh, kh, vh = _heads(r, H), _heads(k, H), _heads(v, H)
+    wh = _heads(logw.astype(jnp.float32), H)  # (B,H,S,hd) log decays
+
+    S0 = state.wkv if state is not None else jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    if state is not None and S <= 4:
+        # exact recurrence (decode)
+        def step(carry, t):
+            st = carry
+            rt = rh[:, :, t].astype(jnp.float32)
+            kt = kh[:, :, t].astype(jnp.float32)
+            vt = vh[:, :, t].astype(jnp.float32)
+            wt = jnp.exp(wh[:, :, t])  # (B,H,hd)
+            at = st + (u[None] * kt)[..., None] * vt[..., None, :]
+            ot = jnp.einsum("bhk,bhkv->bhv", rt, at)
+            st = st * wt[..., None] + kt[..., None] * vt[..., None, :]
+            return st, ot
+
+        st, outs = jax.lax.scan(step, S0, jnp.arange(S))
+        o = outs.transpose(1, 2, 0, 3)  # (S,B,H,hd) -> (B,H,S,hd)
+    else:
+        # chunked parallel form
+        pad = (-S) % chunk
+        if pad:
+            raise ValueError(f"seq {S} must be a multiple of chunk {chunk}")
+        nC = S // chunk
+        rc = rh.reshape(B, H, nC, chunk, hd).astype(jnp.float32)
+        kc = kh.reshape(B, H, nC, chunk, hd).astype(jnp.float32)
+        vc = vh.reshape(B, H, nC, chunk, hd).astype(jnp.float32)
+        wc = wh.reshape(B, H, nC, chunk, hd)
+        cum = jnp.cumsum(wc, axis=3)  # inclusive cumulative log decay
+        cum_prev = cum - wc  # exclusive (W_{t-1})
+        tot = cum[:, :, :, -1]  # (B,H,nC,hd) chunk total log decay
+
+        a_q = rc * jnp.exp(jnp.clip(cum_prev, -30.0, 0.0))  # query-side
+        b_k = kc * jnp.exp(jnp.clip(-cum, -30.0, 30.0))  # key-side
+        k_out = kc * jnp.exp(jnp.clip(tot[..., None, :] - cum, -30.0, 0.0))  # for state update
+
+        scores = jnp.einsum("bhctk,bhcsk->bhcts", a_q, b_k)  # t=query, s=key
+        tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)
+        diag = jnp.einsum("bhctk,hk,bhctk->bhct", rc, u, kc)  # u-bonus on the diagonal
+        intra = jnp.einsum("bhcts,bhcsv->bhctv", scores * tri, vc) + diag[..., None] * vc
+
+        def chunk_step(st, c):
+            inter = jnp.einsum("bhtk,bhkv->bhtv", a_q[:, :, c], st)
+            st_new = st * jnp.exp(tot[:, :, c])[..., None] + jnp.einsum(
+                "bhtk,bhtv->bhkv", k_out[:, :, c], vc[:, :, c]
+            )
+            return st_new, inter
+
+        st, inters = jax.lax.scan(chunk_step, S0, jnp.arange(nC))
+        inters = inters.transpose(1, 2, 0, 3, 4)  # (B,H,nC,chunk,hd)
+        o = (intra + inters).reshape(B, H, S, hd)
+
+    # group-norm per head, gate, output proj
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, m)
+    oh = o.reshape(B, S, H, hd)
+    var = jnp.var(oh, axis=-1, keepdims=True)
+    mean = jnp.mean(oh, axis=-1, keepdims=True)
+    oh = (oh - mean) * jax.lax.rsqrt(var + 1e-5)
+    o = (oh.reshape(B, S, m) * p["ln_w"].astype(jnp.float32)).astype(x.dtype)
+    o = o * jax.nn.silu(g)
+    y = jnp.einsum("bla,am->blm", o, p["wo"].astype(x.dtype))
+    new_state = RWKVState(wkv=st, shift=x[:, -1])
+    return y, new_state
+
+
+# ================================================================ Mamba2 ====
+
+def mamba2_specs(d_model: int, *, d_state: int = 64, head_dim: int = 64, expand: int = 2,
+                 n_groups: int = 1, conv_width: int = 4, dtype=jnp.float32):
+    d_inner = expand * d_model
+    H = d_inner // head_dim
+    return {
+        "w_in": pspec(("m", d_model), ("i", 2 * d_inner + 2 * n_groups * d_state + H), dtype=dtype, fan_in=("m",)),
+        "conv": pspec(("w", conv_width), ("c", d_inner + 2 * n_groups * d_state), dtype=dtype, scale=0.3),
+        "A_log": pspec(("h", H), dtype=dtype, init="zeros"),
+        "D": pspec(("h", H), dtype=dtype, init="ones"),
+        "dt_bias": pspec(("h", H), dtype=dtype, init="zeros"),
+        "norm_w": pspec(("i", d_inner), dtype=dtype, init="ones"),
+        "w_out": pspec(("i", d_inner), ("m", d_model), dtype=dtype, fan_in=("i",)),
+    }
+
+
+class MambaState(NamedTuple):
+    ssm: jax.Array  # (B, H, P, N)
+    conv: jax.Array  # (B, W-1, conv_channels) trailing inputs
+
+
+def _causal_conv(x, w, state):
+    """x (B,S,C), w (W,C); returns conv output and new trailing window."""
+    B, S, C = x.shape
+    W = w.shape[0]
+    xin = jnp.concatenate([state, x], axis=1)  # (B, W-1+S, C)
+    out = sum(xin[:, i : i + S] * w[i] for i in range(W))
+    return jax.nn.silu(out), xin[:, -(W - 1) :]
+
+
+def mamba2_mix(p, x, *, d_state: int = 64, head_dim: int = 64, expand: int = 2,
+               n_groups: int = 1, conv_width: int = 4, chunk: int = 64,
+               state: MambaState | None = None):
+    """Mamba2 SSD block. x (B,S,m) -> (y, new_state)."""
+    B, S, m = x.shape
+    d_inner = expand * m
+    H = d_inner // head_dim
+    P, N, G = head_dim, d_state, n_groups
+
+    zxbcdt = jnp.einsum("bsm,mi->bsi", x, p["w_in"].astype(x.dtype))
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * G * N], axis=-1)
+    conv_state = state.conv if state is not None else jnp.zeros((B, conv_width - 1, xbc.shape[-1]), x.dtype)
+    xbc, new_conv = _causal_conv(xbc, p["conv"].astype(x.dtype), conv_state)
+    xs, Bc, Cc = jnp.split(xbc, [d_inner, d_inner + G * N], axis=-1)
+    xs = xs.reshape(B, S, H, P)
+    Bc = Bc.reshape(B, S, G, N)
+    Cc = Cc.reshape(B, S, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bc, rep, axis=2)  # (B,S,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=2)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,) negative
+    loga = dt * A  # (B,S,H) log decay per step, <= 0
+    xdt = xs.astype(jnp.float32) * dt[..., None]  # dt-weighted input
+
+    S0 = state.ssm if state is not None else jnp.zeros((B, H, P, N), jnp.float32)
+
+    if state is not None and S <= 4:
+        def step(carry, t):
+            st = carry
+            a_t = jnp.exp(loga[:, t])  # (B,H)
+            st = st * a_t[..., None, None] + jnp.einsum("bhp,bhn->bhpn", xdt[:, t], Bh[:, t].astype(jnp.float32))
+            yt = jnp.einsum("bhpn,bhn->bhp", st, Ch[:, t].astype(jnp.float32))
+            return st, yt
+
+        st, ys = jax.lax.scan(step, S0, jnp.arange(S))
+        y = ys.transpose(1, 0, 2, 3).reshape(B, S, H * P)
+    else:
+        if S % chunk:
+            raise ValueError(f"seq {S} must be a multiple of chunk {chunk}")
+        nC = S // chunk
+        def csplit(t, shape):
+            return t.reshape(B, nC, chunk, *shape)
+        xc = csplit(xdt, (H, P)).transpose(0, 3, 1, 2, 4)  # (B,H,nC,L,P)
+        bc = csplit(Bh.astype(jnp.float32), (H, N)).transpose(0, 3, 1, 2, 4)
+        cc = csplit(Ch.astype(jnp.float32), (H, N)).transpose(0, 3, 1, 2, 4)
+        lc = csplit(loga, (H,)).transpose(0, 3, 1, 2)  # (B,H,nC,L)
+        cum = jnp.cumsum(lc, axis=-1)  # inclusive
+        tot = cum[..., -1]  # (B,H,nC)
+
+        # intra-chunk: scores_ts = exp(cum_t - cum_s) * (C_t . B_s), s <= t
+        decay = cum[..., :, None] - cum[..., None, :]  # (B,H,nC,L,L), <=0 on/below diag
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        # mask BEFORE exp: above-diagonal entries are positive and would overflow
+        sc = jnp.einsum("bhctn,bhcsn->bhcts", cc, bc) * jnp.exp(jnp.where(tri, decay, -jnp.inf))
+        intra = jnp.einsum("bhcts,bhcsp->bhctp", sc, xc)
+
+        # state-in/out factors
+        q_in = cc * jnp.exp(cum)[..., None]  # queries against incoming state
+        k_out = bc * jnp.exp(tot[..., None, None] - cum[..., None])  # contribution to outgoing state
+
+        def chunk_step(st, c):
+            inter = jnp.einsum("bhtn,bhpn->bhtp", q_in[:, :, c], st)
+            st_new = st * jnp.exp(tot[:, :, c])[..., None, None] + jnp.einsum(
+                "bhtp,bhtn->bhpn", xc[:, :, c], k_out[:, :, c]
+            )
+            return st_new, inter
+
+        st, inters = jax.lax.scan(chunk_step, S0, jnp.arange(nC))
+        inters = inters.transpose(1, 2, 0, 3, 4)  # (B,H,nC,L,P)
+        y = (intra + inters).transpose(0, 2, 3, 1, 4).reshape(B, S, H * P)
+
+    y = y + (p["D"].astype(jnp.float32)[None, None, :, None] * xs.astype(jnp.float32)).reshape(B, S, H * P)
+    # gated RMSNorm
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-6)).astype(x.dtype) * p["norm_w"].astype(x.dtype)
+    out = jnp.einsum("bsi,im->bsm", y, p["w_out"].astype(x.dtype))
+    return out, MambaState(ssm=st, conv=new_conv)

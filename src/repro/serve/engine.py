@@ -1,0 +1,133 @@
+"""Batched serving engine: prefill + decode with continuous batching.
+
+A fixed pool of batch *slots* shares one KV cache allocation; finished
+sequences free their slot and the next queued request is prefilled into it.
+Sampling is greedy or temperature-based.  This is the single-host engine
+(used by examples/serve_lm.py and the serving tests); at scale the same
+``decode_step`` is the multi-pod dry-run's ``serve_step``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.sharding import use_recipe
+
+__all__ = ["ServeConfig", "Engine"]
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 512
+    batch_slots: int = 4
+    temperature: float = 0.0  # 0 = greedy
+    eos_token: int = 1
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class _Slot:
+    request_id: int | None = None
+    tokens: list = dataclasses.field(default_factory=list)
+    remaining: int = 0
+
+
+class Engine:
+    """Single-model serving engine with slot-based continuous batching."""
+
+    def __init__(self, cfg, params, scfg: ServeConfig, recipe=None):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.recipe = recipe
+        B = scfg.batch_slots
+        self.state = lm.DecodeState(
+            caches=lm.init_cache(cfg, B, scfg.max_len),
+            positions=jnp.zeros((B,), jnp.int32),
+        )
+        self.slots = [_Slot() for _ in range(B)]
+        self.queue: list[tuple[int, list[int], int]] = []  # (req_id, prompt, max_new)
+        self.finished: dict[int, list[int]] = {}
+        self._key = jax.random.PRNGKey(scfg.seed)
+        self._step = jax.jit(self._step_impl)
+
+    # ------------------------------------------------------------ public ----
+    def submit(self, request_id: int, prompt: list[int], max_new_tokens: int) -> None:
+        self.queue.append((request_id, list(prompt), max_new_tokens))
+
+    def run(self, max_steps: int = 10_000) -> dict[int, list[int]]:
+        steps = 0
+        while (self.queue or any(s.request_id is not None for s in self.slots)) and steps < max_steps:
+            self._fill_slots()
+            self._decode_once()
+            steps += 1
+        return self.finished
+
+    # ---------------------------------------------------------- internals ----
+    def _fill_slots(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot.request_id is None and self.queue:
+                req_id, prompt, max_new = self.queue.pop(0)
+                slot.request_id = req_id
+                slot.tokens = list(prompt)
+                slot.remaining = max_new
+                self._prefill_slot(i, prompt)
+
+    def _prefill_slot(self, i: int, prompt: list[int]) -> None:
+        """Sequential prefill into slot i (token-by-token; batched prefill is
+        the multi-pod ``prefill`` cell — here simplicity wins)."""
+        pos0 = 0
+        caches = self.state.caches
+        for t in prompt[:-1]:
+            batch = self._token_batch(i, t)
+            positions = self.state.positions.at[i].set(pos0)
+            logits, new_state = self._step(self.params, lm.DecodeState(caches, positions), batch)
+            caches = new_state.caches
+            pos0 += 1
+        self.state = lm.DecodeState(caches, self.state.positions.at[i].set(pos0))
+
+    def _token_batch(self, slot: int, token: int):
+        B = self.scfg.batch_slots
+        if self.cfg.input_kind == "embeds":
+            emb = np.zeros((B, 1, self.cfg.d_model), np.float32)
+            return {"embeds": jnp.asarray(emb)}
+        toks = np.zeros((B, 1), np.int32)
+        toks[slot, 0] = token
+        return {"tokens": jnp.asarray(toks)}
+
+    def _decode_once(self) -> None:
+        B = self.scfg.batch_slots
+        toks = np.zeros((B, 1), np.int32)
+        for i, slot in enumerate(self.slots):
+            if slot.request_id is not None and slot.tokens:
+                toks[i, 0] = slot.tokens[-1]
+        batch = (
+            {"tokens": jnp.asarray(toks)}
+            if self.cfg.input_kind != "embeds"
+            else {"embeds": jnp.zeros((B, 1, self.cfg.d_model), jnp.float32)}
+        )
+        logits, self.state = self._step(self.params, self.state, batch)
+        logits = np.asarray(logits[:, -1, : self.cfg.vocab])  # strip padded vocab
+        for i, slot in enumerate(self.slots):
+            if slot.request_id is None:
+                continue
+            if self.scfg.temperature > 0:
+                self._key, sub = jax.random.split(self._key)
+                probs = jax.nn.softmax(jnp.asarray(logits[i]) / self.scfg.temperature)
+                nxt = int(jax.random.categorical(sub, jnp.log(probs + 1e-9)))
+            else:
+                nxt = int(np.argmax(logits[i]))
+            slot.tokens.append(nxt)
+            slot.remaining -= 1
+            if nxt == self.scfg.eos_token or slot.remaining <= 0:
+                self.finished[slot.request_id] = slot.tokens
+                self.slots[i] = _Slot()
+
+    def _step_impl(self, params, state, batch):
+        with use_recipe(self.recipe):
+            return lm.decode_step(params, state, batch, self.cfg)

@@ -1,0 +1,47 @@
+"""Shared test helpers.
+
+NOTE: XLA_FLAGS / device-count overrides are deliberately NOT set here —
+single-process tests must see 1 CPU device.  Multi-device tests spawn
+subprocesses with their own XLA_FLAGS (see ``run_distributed``).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, SRC)
+
+
+def run_distributed(code: str, *, devices: int = 8, timeout: int = 480) -> str:
+    """Run ``code`` in a fresh python with N fake CPU devices; returns stdout.
+
+    The subprocess prefix sets XLA_FLAGS before importing jax, mirroring
+    launch/dryrun.py."""
+    prefix = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={devices}'\n"
+        "import sys\n"
+        f"sys.path.insert(0, {SRC!r})\n"
+    )
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", prefix + code],
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        env=env,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"distributed subprocess failed (rc={proc.returncode}):\n"
+            f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr[-4000:]}"
+        )
+    return proc.stdout
+
+
+@pytest.fixture
+def distributed():
+    return run_distributed

@@ -1,0 +1,49 @@
+"""Fault tolerance: crash-injection + watchdog restart + exact resume."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _run_train(tmp, extra, timeout=560):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--arch", "phi4-mini-3.8b", "--smoke",
+           "--steps", "12", "--ckpt-every", "3", "--log-every", "2",
+           "--seq-len", "32", "--global-batch", "4",
+           "--ckpt-dir", tmp] + extra
+    return subprocess.run(cmd, capture_output=True, text=True, timeout=timeout, env=env)
+
+
+def test_crash_and_manual_restart(tmp_path):
+    d = str(tmp_path)
+    # first run crashes at step 10 (checkpoints at 3, 6, 9 had time to land;
+    # an async save in flight may be lost — that is the accepted contract:
+    # atomic rename guarantees the *previous* checkpoint survives)
+    p1 = _run_train(d, ["--crash-at-step", "10"])
+    assert p1.returncode == 42, p1.stdout + p1.stderr
+    assert "FAULT INJECTION" in p1.stdout
+    # second run resumes from the last completed checkpoint and finishes
+    p2 = _run_train(d, ["--crash-at-step", "10"])  # crash skipped: resume != fresh
+    assert p2.returncode == 0, p2.stdout + p2.stderr
+    assert "resumed from step" in p2.stdout
+    assert "done: 12 steps" in p2.stdout
+
+
+def test_watchdog_auto_restart(tmp_path):
+    d = str(tmp_path)
+    p = _run_train(d, ["--crash-at-step", "10", "--watchdog", "--max-restarts", "2"])
+    assert p.returncode == 0, p.stdout + p.stderr
+    assert "restart 1 from latest checkpoint" in p.stdout
+    assert "training completed" in p.stdout
+
+
+def test_completes_without_faults(tmp_path):
+    p = _run_train(str(tmp_path), [])
+    assert p.returncode == 0, p.stdout + p.stderr
+    assert "done: 12 steps" in p.stdout

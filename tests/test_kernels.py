@@ -1,0 +1,104 @@
+"""Pallas kernel sweeps: every kernel x shapes x dtypes vs the ref.py oracle
+(interpret=True executes the kernel body on CPU)."""
+import numpy as np
+import pytest
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+ALL_MAJORS = ["I/I/K", "I/I/J", "I/K/K", "I/K/J", "J/I/K", "J/I/J", "J/K/K", "J/K/J"]
+
+
+def _gemm_operands(M, N, K, majors, dtype):
+    _, aM, bM = majors.split("/")
+    a = jnp.asarray(RNG.standard_normal((K, M) if aM == "K" else (M, K)), dtype)
+    b = jnp.asarray(RNG.standard_normal((N, K) if bM == "J" else (K, N)), dtype)
+    return a, b
+
+
+@pytest.mark.parametrize("majors", ALL_MAJORS)
+def test_gemm_all_layout_configs(majors):
+    a, b = _gemm_operands(64, 48, 32, majors, jnp.float32)
+    out = ops.gemm(a, b, majors=majors, impl="interpret", bm=32, bn=16, bk=16)
+    np.testing.assert_allclose(out, ref.gemm_ref(a, b, majors=majors), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(32, 32, 32), (128, 64, 32), (64, 128, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_shape_dtype_sweep(shape, dtype):
+    M, N, K = shape
+    a, b = _gemm_operands(M, N, K, "I/I/K", dtype)
+    out = ops.gemm(a, b, majors="I/I/K", impl="interpret", bm=32, bn=32, bk=32)
+    expect = ref.gemm_ref(a, b, majors="I/I/K")
+    # tolerance scales with the contraction length (accumulation order differs)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(expect, np.float32), rtol=tol, atol=tol)
+
+
+def test_gemm_rejects_bad_blocks():
+    a, b = _gemm_operands(30, 30, 30, "I/I/K", jnp.float32)
+    with pytest.raises(ValueError):
+        ops.gemm(a, b, majors="I/I/K", impl="interpret", bm=16, bn=16, bk=16)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_gqa(hq, hkv, causal):
+    B, S, D = 2, 128, 32
+    q = jnp.asarray(RNG.standard_normal((B, hq, S, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, hkv, S, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, hkv, S, D)), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=causal, impl="interpret", bq=32, bk=32)
+    expect = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, expect, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-4), (jnp.bfloat16, 3e-2)])
+def test_flash_attention_dtypes(dtype, tol):
+    B, H, S, D = 1, 2, 64, 16
+    q = jnp.asarray(RNG.standard_normal((B, H, S, D)), dtype)
+    k = jnp.asarray(RNG.standard_normal((B, H, S, D)), dtype)
+    v = jnp.asarray(RNG.standard_normal((B, H, S, D)), dtype)
+    out = ops.flash_attention(q, k, v, impl="interpret", bq=16, bk=16)
+    expect = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_blockwise_ref_matches_dense():
+    """The model-stack attention (pure-jnp blockwise) == dense oracle."""
+    B, Hq, Hkv, S, D = 2, 4, 2, 192, 16
+    q = jnp.asarray(RNG.standard_normal((B, Hq, S, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, Hkv, S, D)), jnp.float32)
+    for block in (32, 64, 192):
+        out = ref.blockwise_attention_ref(q, k, v, block=block)
+        np.testing.assert_allclose(out, ref.attention_ref(q, k, v), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("shape", [(64, 32), (3, 64, 32), (2, 2, 32, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+def test_transpose_tiled(shape, dtype):
+    if dtype == jnp.int32:
+        x = jnp.asarray(RNG.integers(0, 100, shape), dtype)
+    else:
+        x = jnp.asarray(RNG.standard_normal(shape), dtype)
+    out = ops.transpose_tiled(x, impl="interpret", bm=16, bn=16)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref.transpose_ref(x)))
+
+
+def test_flash_attention_long_context_blocks():
+    """512-wide blocks over 1k tokens — the prefill configuration, scaled down."""
+    B, H, S, D = 1, 2, 1024, 32
+    q = jnp.asarray(RNG.standard_normal((B, H, S, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, H, S, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, H, S, D)), jnp.float32)
+    out = ops.flash_attention(q, k, v, impl="interpret", bq=512, bk=512)
+    np.testing.assert_allclose(out, ref.attention_ref(q, k, v), rtol=3e-4, atol=3e-4)

@@ -1,0 +1,160 @@
+"""Unit + property tests for the layout algebra (the paper's §2/§3 semantics)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import LayoutError, common_refinement
+from repro.core.layout import (
+    scalar, vector, vectors, into_blocks, merge_blocks, hoist, reorder, rename,
+    set_length, blocked,
+)
+
+
+def col_major(n=6, m=4):
+    return scalar(np.float32) ^ vector("i", n) ^ vector("j", m)
+
+
+def test_vector_order_matches_paper():
+    # scalar ^ vector<'i'>(N) ^ vector<'j'>(M): j outermost => column-major
+    l = col_major(6, 4)
+    assert l.axis_names == ("j", "i")
+    assert l.shape == (4, 6)
+    assert l.offset({"i": 2, "j": 3}) == 3 * 6 + 2
+    # row-major: swap application order
+    r = scalar(np.float32) ^ vector("j", 4) ^ vector("i", 6)
+    assert r.offset({"i": 2, "j": 3}) == 2 * 4 + 3
+
+
+def test_vectors_shorthand():
+    a = scalar(np.int32) ^ vectors("i", "j")(6, 4)
+    b = scalar(np.int32) ^ vector("i", 6) ^ vector("j", 4)
+    assert a.axes == b.axes and a.dim_map == b.dim_map
+
+
+def test_into_blocks_splits_index_space():
+    t = col_major(6, 4) ^ into_blocks("i", "I", block_size=3)
+    assert t.index_space() == {"I": 2, "i": 3, "j": 4}
+    assert t.axis_names == ("j", "I", "i")  # split in place, block outer
+    # offset: (I, i) decompose the old i
+    base = col_major(6, 4)
+    for i in range(6):
+        for j in range(4):
+            assert t.offset({"I": i // 3, "i": i % 3, "j": j}) == base.offset({"i": i, "j": j})
+
+
+def test_into_blocks_divisibility_error():
+    with pytest.raises(LayoutError):
+        col_major(6, 4) ^ into_blocks("i", "I", block_size=4)
+
+
+def test_merge_blocks_logical_only():
+    t = col_major(6, 4) ^ into_blocks("i", "I", block_size=3) ^ merge_blocks("I", "j", "r")
+    assert t.index_space() == {"r": 2 * 4, "i": 3}
+    # physical axes unchanged
+    assert t.axis_names == ("j", "I", "i")
+
+
+def test_blocked_keeps_index_space():
+    t = col_major(6, 4) ^ blocked("i", "It", block_size=3)
+    assert t.index_space() == {"i": 6, "j": 4}
+    assert t.dim_axes("i") == ("It", "i")
+
+
+def test_hoist_moves_axes():
+    t = col_major(6, 4) ^ hoist("i")
+    assert t.axis_names == ("i", "j")
+    assert t.index_space() == {"i": 6, "j": 4}
+
+
+def test_reorder_and_rename():
+    t = col_major(6, 4) ^ reorder("i", "j")
+    assert t.axis_names == ("i", "j")
+    t2 = t ^ rename("i", "row")
+    assert t2.axis_names == ("row", "j")
+    assert t2.index_space() == {"row": 6, "j": 4}
+    with pytest.raises(LayoutError):
+        t ^ rename("i", "j")
+
+
+def test_open_axis_and_set_length():
+    t = scalar(np.float32) ^ vector("i", 6) ^ vector("r", None)
+    assert not t.is_resolved()
+    with pytest.raises(LayoutError):
+        _ = t.shape
+    t2 = t ^ set_length("r", 8)
+    assert t2.shape == (8, 6)
+
+
+def test_stride_along_traits():
+    l = col_major(6, 4)  # axes (j, i), shape (4, 6)
+    assert l.stride_along("i") == 1
+    assert l.stride_along("j") == 6
+    assert l.is_contiguous_along("i")
+    assert not l.is_contiguous_along("j")
+
+
+def test_duplicate_dim_rejected():
+    with pytest.raises(LayoutError):
+        col_major(6, 4) ^ vector("i", 3)
+
+
+# ------------------------------------------------------------ properties ----
+
+@st.composite
+def factorizations(draw, max_total=256):
+    """Two random factorizations of the same total."""
+    primes = [2, 2, 2, 3, 3, 5, 7]
+    chosen = draw(st.lists(st.sampled_from(primes), min_size=1, max_size=6))
+    total = int(np.prod(chosen))
+    def split(fs):
+        out, cur = [], 1
+        for f in fs:
+            cur *= f
+            if draw(st.booleans()):
+                out.append(cur)
+                cur = 1
+        if cur > 1 or not out:
+            out.append(cur)
+        return out
+    a = split(chosen)
+    b = split(draw(st.permutations(chosen)))
+    return total, a, b
+
+
+@given(factorizations())
+@settings(max_examples=200, deadline=None)
+def test_common_refinement_property(data):
+    total, a, b = data
+    try:
+        ref = common_refinement(a, b)
+    except LayoutError:
+        return  # incompatible factorizations are allowed to fail
+    assert int(np.prod(ref)) == total
+    # the refinement must refine both inputs: consecutive groups multiply back
+    for f in (a, b):
+        i = 0
+        for seg in f:
+            prod = 1
+            while prod < seg:
+                prod *= ref[i]
+                i += 1
+            assert prod == seg
+        assert i == len(ref)
+
+
+@given(st.integers(2, 5), st.integers(2, 5), st.integers(1, 4))
+@settings(max_examples=50, deadline=None)
+def test_offset_bijection(n, m, k):
+    """A layout is a bijection: all offsets distinct and within bounds."""
+    l = scalar(np.int8) ^ vector("i", n) ^ vector("j", m) ^ vector("k", k)
+    seen = set()
+    for i in range(n):
+        for j in range(m):
+            for kk in range(k):
+                off = l.offset({"i": i, "j": j, "k": kk})
+                assert 0 <= off < n * m * k
+                seen.add(off)
+    assert len(seen) == n * m * k

@@ -1,0 +1,114 @@
+"""End-to-end training behaviour: loss decreases, microbatch-accumulation
+equivalence, checkpoint/restart resumes exactly."""
+import dataclasses
+import numpy as np
+import pytest
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.data.pipeline import DataConfig, make_batch
+from repro.configs.base import ShapeCell
+from repro.models import lm
+from repro.ckpt.manager import CheckpointManager
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.trainer import make_train_step
+
+CELL = ShapeCell("tiny", seq_len=64, global_batch=8, kind="train")
+
+
+def _setup(arch="phi4-mini-3.8b", lr=3e-3, **cfg_over):
+    cfg = configs.get(arch, smoke=True)
+    if cfg_over:
+        cfg = dataclasses.replace(cfg, **cfg_over)
+    params = lm.init_model(cfg, jax.random.PRNGKey(0))
+    ocfg = OptConfig(lr=lr, warmup_steps=5, total_steps=100, weight_decay=0.0)
+    opt = init_opt_state(params, ocfg)
+    return cfg, params, ocfg, opt
+
+
+def test_loss_decreases():
+    cfg, params, ocfg, opt = _setup()
+    step = jax.jit(make_train_step(cfg, None, ocfg))
+    losses = []
+    for s in range(30):
+        batch = jax.tree.map(jnp.asarray, make_batch(cfg, CELL, s, DataConfig(seed=1)))
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    # synthetic data has learnable structure; the curve must come down
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2, losses
+
+
+def test_microbatch_equivalence():
+    """k-microbatch gradient accumulation == single big batch.
+
+    Compared at the *gradient* level: after an Adam step the comparison is
+    ill-conditioned (sign-like updates amplify 1e-7 grad noise), so params
+    are the wrong observable."""
+    from repro.models import lm as lm_mod
+    from repro.train.trainer import _split_batch
+
+    # f32 activations: the equivalence is then exact math, not bf16 rounding
+    cfg, params, ocfg, opt = _setup(act_dtype=jnp.float32)
+    batch = jax.tree.map(jnp.asarray, make_batch(cfg, CELL, 0, DataConfig(seed=2)))
+
+    grad_fn = jax.jit(jax.value_and_grad(lambda p, b: lm_mod.loss_fn(p, b, cfg), has_aux=True))
+    (_, _), g1 = grad_fn(params, batch)
+
+    mb = _split_batch(batch, 4)
+    g4 = jax.tree.map(jnp.zeros_like, params)
+    for i in range(4):
+        micro = jax.tree.map(lambda x: x[i], mb)
+        (_, _), g = grad_fn(params, micro)
+        g4 = jax.tree.map(lambda a, b: a + b / 4, g4, g)
+
+    for k, a, b in zip(
+        jax.tree_util.tree_leaves_with_path(g1), jax.tree.leaves(g1), jax.tree.leaves(g4)
+    ):
+        scale = float(jnp.max(jnp.abs(a))) + 1e-8
+        diff = float(jnp.max(jnp.abs(a - b)))
+        assert diff < 1e-4 + 1e-3 * scale, (k[0], diff, scale)
+
+
+def test_checkpoint_restart_exact(tmp_path):
+    """Kill/restart mid-run: the resumed run must produce bit-identical
+    params vs the uninterrupted run (deterministic step-indexed data)."""
+    cfg, params, ocfg, opt = _setup()
+    step = jax.jit(make_train_step(cfg, None, ocfg))
+    dcfg = DataConfig(seed=3)
+
+    # uninterrupted 10 steps
+    p_ref, o_ref = params, opt
+    for s in range(10):
+        batch = jax.tree.map(jnp.asarray, make_batch(cfg, CELL, s, dcfg))
+        p_ref, o_ref, _ = step(p_ref, o_ref, batch)
+
+    # run 5 steps, checkpoint, "crash", restore, run 5 more
+    mgr = CheckpointManager(str(tmp_path))
+    p, o = params, opt
+    for s in range(5):
+        batch = jax.tree.map(jnp.asarray, make_batch(cfg, CELL, s, dcfg))
+        p, o, _ = step(p, o, batch)
+    mgr.save(5, {"params": p, "opt": o})
+    del p, o  # crash
+
+    restored, _ = mgr.restore({"params": params, "opt": opt})
+    p, o = restored["params"], restored["opt"]
+    for s in range(5, 10):
+        batch = jax.tree.map(jnp.asarray, make_batch(cfg, CELL, s, dcfg))
+        p, o, _ = step(p, o, batch)
+
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_moe_aux_loss_flows():
+    cfg, params, ocfg, opt = _setup("phi3.5-moe-42b-a6.6b", lr=1e-3)
+    step = jax.jit(make_train_step(cfg, None, ocfg))
+    batch = jax.tree.map(jnp.asarray, make_batch(cfg, CELL, 0, DataConfig()))
+    _, _, m = step(params, opt, batch)
+    assert np.isfinite(float(m["loss"]))

@@ -1,5 +1,7 @@
 """Paper Fig. 3: distributed GEMM across the 8 tile-layout configurations
-(C/A/B majors), MINI and EXTRALARGE PolyBench datasets.
+(C/A/B majors), MINI and EXTRALARGE PolyBench datasets — for both the 1-D
+row-panel algorithm and the 2-D-grid ring-SUMMA (p2p rotation +
+reduce-scatter epilogue).
 
 Runs in a subprocess with 8 fake devices (mirroring the paper's 8-node
 cluster) and reports mean±std wall time over repeated runs, plus validation
@@ -18,33 +20,39 @@ import os, sys, time, json
 import numpy as np
 sys.path.insert(0, {src!r})
 sys.path.insert(0, {root!r})
-from examples.distributed_gemm import run_distributed_gemm
+from examples.distributed_gemm import run_distributed_gemm, run_summa_gemm
 from repro.configs.gemm_case_study import DATASETS, LAYOUT_CONFIGS
 
+ALGOS = dict(
+    panel1d=lambda ni, nj, nk, majors: run_distributed_gemm(ni=ni, nj=nj, nk=nk, majors=majors, ranks=8),
+    summa2d=lambda ni, nj, nk, majors: run_summa_gemm(ni=ni, nj=nj, nk=nk, majors=majors, grid=(2, 4)),
+)
 results = []
 for dataset in {datasets!r}:
     ni, nj, nk = DATASETS[dataset]
-    for majors in LAYOUT_CONFIGS:
-        times = []
-        C = ref = None
-        for rep in range({reps}):
-            C, ref = run_distributed_gemm(ni=ni, nj=nj, nk=nk, majors=majors, ranks=8)
-        # timed reps (first run paid compile)
-        import time as _t
-        for rep in range({reps}):
-            t0 = _t.perf_counter()
-            C, ref = run_distributed_gemm(ni=ni, nj=nj, nk=nk, majors=majors, ranks=8)
-            times.append(_t.perf_counter() - t0)
-        np.testing.assert_allclose(C, ref, rtol=1e-3, atol=1e-3)
-        results.append(dict(dataset=dataset, majors=majors,
-                            mean_s=float(np.mean(times)), std_s=float(np.std(times))))
+    for algo in {algos!r}:
+        fn = ALGOS[algo]
+        for majors in LAYOUT_CONFIGS:
+            times = []
+            C = ref = None
+            for rep in range({reps}):
+                C, ref = fn(ni, nj, nk, majors)
+            # timed reps (first run paid compile)
+            import time as _t
+            for rep in range({reps}):
+                t0 = _t.perf_counter()
+                C, ref = fn(ni, nj, nk, majors)
+                times.append(_t.perf_counter() - t0)
+            np.testing.assert_allclose(C, ref, rtol=1e-3, atol=1e-3)
+            results.append(dict(dataset=dataset, algo=algo, majors=majors,
+                                mean_s=float(np.mean(times)), std_s=float(np.std(times))))
 print("RESULTS_JSON=" + json.dumps(results))
 """
 
 
-def run(datasets=("MINI", "EXTRALARGE"), reps=3) -> list[str]:
+def run(datasets=("MINI", "EXTRALARGE"), reps=3, algos=("panel1d", "summa2d")) -> list[str]:
     code = _WORKER.format(src=SRC, root=os.path.abspath(os.path.join(HERE, "..")),
-                          datasets=list(datasets), reps=reps)
+                          datasets=list(datasets), reps=reps, algos=list(algos))
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     prefix = "import os\nos.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=8'\n"
@@ -54,9 +62,9 @@ def run(datasets=("MINI", "EXTRALARGE"), reps=3) -> list[str]:
         raise RuntimeError(proc.stderr[-3000:])
     line = [l for l in proc.stdout.splitlines() if l.startswith("RESULTS_JSON=")][0]
     results = json.loads(line[len("RESULTS_JSON="):])
-    out = ["dataset,majors,us_per_call,std_us"]
+    out = ["dataset,algo,majors,us_per_call,std_us"]
     for r in results:
-        out.append(f"{r['dataset']},{r['majors']},{r['mean_s']*1e6:.0f},{r['std_s']*1e6:.0f}")
+        out.append(f"{r['dataset']},{r['algo']},{r['majors']},{r['mean_s']*1e6:.0f},{r['std_s']*1e6:.0f}")
     return out
 
 

@@ -1,18 +1,28 @@
 """The paper's case study (§5): a layout-agnostic distributed GEMM.
 
-Each rank computes one tile of C = A @ B:
-  * A (ni x nk) is split along i into R row-blocks,
-  * B (nk x nj) is broadcast,
-  * C (ni x nj) is split along i and gathered from the ranks.
+Two algorithms, both layout-agnostic end to end:
 
-The point of the paper — and of this example — is that the *global* matrices
-and the *per-rank tiles* choose their physical layouts independently
-(row-major or column-major per the C/A/B "majors" configuration, Fig. 3),
-and the scatter/broadcast/gather transfers transform the layouts
+1-D (``run_distributed_gemm``): each rank computes one row-panel of
+C = A @ B — A is split along i, B broadcast, C gathered.
+
+2-D SUMMA (``run_summa_gemm``): a ``(rows, cols)`` communicator grid (the
+paper's ``MPI_Cart_create``).  Rank (r, c) owns A[i-block r, k-block c]; B's
+k-panels live k-block-per-grid-column with their j-blocks spread down the
+rows.  Each of R ring steps multiplies the local A tile against the current
+B panel and the panels rotate along the *rows* sub-communicator with the new
+layout-agnostic p2p ring shift (``repro.core.ring_shift``); the epilogue is a
+``reduce_scatter_bag`` along the *cols* sub-communicator that sums the
+partial C panels over k and scatters j — with the final C tile layout chosen
+freely, the transform fused into the transfer.
+
+In both, the *global* matrices and the *per-rank tiles* choose their physical
+layouts independently (row-major or column-major per the C/A/B "majors"
+configuration, Fig. 3), and every transfer transforms the layouts
 automatically.  The per-rank compute is the layout-parametric GEMM kernel
 (Pallas on TPU, its oracle elsewhere).
 
 Run:  python examples/distributed_gemm.py --majors J/K/J --dataset MINI
+      python examples/distributed_gemm.py --summa --grid 2x4
 (on CPU it fakes 8 devices; on a TPU slice it uses the real ones)
 """
 import os
@@ -33,9 +43,14 @@ import numpy as np
 from repro.core import (
     bag,
     broadcast,
+    dist_full,
     gather,
+    make_mesh,
+    mpi_cart_traverser,
     mpi_traverser,
     rank_map,
+    reduce_scatter_bag,
+    ring_shift,
     scatter,
     traverser,
 )
@@ -58,7 +73,7 @@ def run_distributed_gemm(*, ni: int, nj: int, nk: int, majors: str = "I/I/K", ra
     if mesh is None:
         n_dev = len(jax.devices())
         ranks = ranks or n_dev
-        mesh = jax.make_mesh((ranks,), ("r",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((ranks,), ("r",))
     ranks = ranks or mesh.shape["r"]
     assert ni % ranks == 0, (ni, ranks)
 
@@ -111,6 +126,94 @@ def run_distributed_gemm(*, ni: int, nj: int, nk: int, majors: str = "I/I/K", ra
     return C_result, C_oracle
 
 
+def run_summa_gemm(*, ni: int, nj: int, nk: int, grid: tuple[int, int] = (2, 4),
+                   majors: str = "I/I/K", mesh=None, verbose: bool = False):
+    """2-D-grid SUMMA C = A @ B; returns (C_result, C_oracle) as (ni, nj).
+
+    Placement on the (rows=R, cols=Cc) grid:
+      * A[i-block r, k-block c] on rank (r, c)        (stationary)
+      * B[k-block c, j-block r] on rank (r, c)        (rotates along rows)
+      * C[i-block r, j-chunk c] on rank (r, c)        (reduce_scatter output)
+
+    Ring phase: at step s rank (r, c) holds B[k-block c, j-block (r+s) % R]
+    and fills j-block (r+s) % R of its partial panel P = A[r,c] @ B[k c, :];
+    the B panels then ring-shift one hop along the *rows* sub-communicator.
+    Epilogue: summing P over the grid columns (= over k-blocks) and
+    scattering j is exactly one layout-agnostic ``reduce_scatter_bag`` along
+    the *cols* sub-communicator.
+    """
+    c_major, a_major, b_major = majors.upper().split("/")
+    R, Cc = grid
+    if mesh is None:
+        mesh = make_mesh((R, Cc), ("rows", "cols"))
+    assert ni % R == 0 and nk % Cc == 0 and nj % R == 0 and nj % Cc == 0, (ni, nj, nk, grid)
+    mi, kc, jr, jc = ni // R, nk // Cc, nj // R, nj // Cc
+
+    rng = np.random.default_rng(11)
+    A_np = rng.standard_normal((ni, nk)).astype(np.float32)
+    B_np = rng.standard_normal((nk, nj)).astype(np.float32)
+
+    # --- global bags, laid out per the config --------------------------------
+    A_layout = _mat_layout("i", "k", ni, nk, "i" if a_major == "I" else "k")
+    B_layout = _mat_layout("k", "j", nk, nj, "k" if b_major == "K" else "j")
+    A_glob = bag(A_layout, A_np if A_layout.axis_names == ("i", "k") else A_np.T)
+    B_glob = bag(B_layout, B_np if B_layout.axis_names == ("k", "j") else B_np.T)
+
+    # --- communicator grid (paper's MPI_Cart_create) -------------------------
+    A_root_l = A_layout ^ into_blocks("i", "Ri", num_blocks=R) ^ into_blocks("k", "Ck", num_blocks=Cc)
+    B_root_l = B_layout ^ into_blocks("k", "Ck", num_blocks=Cc) ^ into_blocks("j", "Rj", num_blocks=R)
+    A_root = bag(A_root_l, A_glob.data)
+    B_root = bag(B_root_l, B_glob.data)
+    dtA = mpi_cart_traverser([("Ri", "rows"), ("Ck", "cols")], traverser(A_root), mesh)
+    dtB = mpi_cart_traverser([("Rj", "rows"), ("Ck", "cols")], traverser(B_root), mesh)
+
+    # --- per-rank tile layouts, chosen independently of the global ones ------
+    A_tile = _mat_layout("i", "k", mi, kc, "i" if a_major == "I" else "k")
+    B_tile = _mat_layout("k", "j", kc, jr, "k" if b_major == "K" else "j")
+    C_tile = _mat_layout("i", "j", mi, jc, "i" if c_major == "I" else "j")
+    P_l = _mat_layout("i", "j", mi, nj, "i")  # partial panel, i-major internal
+
+    t0 = time.perf_counter()
+    A_dist = scatter(A_root, A_tile, dtA)  # layout transform rides the scatter
+    B_cur = scatter(B_root, B_tile, dtB)
+    P = dist_full(dtA, P_l)
+
+    local_majors = f"I/{a_major}/{b_major}"
+    for s in range(R):
+        def step(state, p, a, b_panel, _s=s):
+            # per-rank layout-parametric GEMM (paper's kernel, Pallas on TPU);
+            # the SUMMA inner step accumulates into the partial C panel block
+            jb = (state["Ri"] + _s) % R
+            cur = jax.lax.dynamic_slice(p.data, (0, jb * jr), (mi, jr))
+            block = ops.gemm(a.data, b_panel.data, cur, majors=local_majors)
+            new = jax.lax.dynamic_update_slice(p.data, block, (0, jb * jr))
+            return p.with_data(new)
+
+        P = rank_map(step, dtA, P, A_dist, B_cur, out_tile_layout=P_l)
+        if s < R - 1:  # rotate B panels one hop up the rows ring (p2p §4.3)
+            B_cur = ring_shift(B_cur, -1, rank_dim="Rj")
+
+    # epilogue: sum partials over k (grid cols) and scatter j, landing each
+    # rank's C tile directly in its chosen layout
+    C_grid = reduce_scatter_bag(P, C_tile, scatter_dim="j", rank_dim="Ck")
+    C_grid.data.block_until_ready()
+    elapsed = time.perf_counter() - t0
+
+    # back to a plain (ni, nj) row-major array for checking
+    flat_tile = _mat_layout("i", "j", mi, jc, "i")
+    C_result = np.zeros((ni, nj), np.float32)
+    for r in range(R):
+        for c in range(Cc):
+            t = C_grid.tile((r, c)).to_layout(flat_tile)
+            C_result[r * mi:(r + 1) * mi, c * jc:(c + 1) * jc] = np.asarray(t.data)
+    C_oracle = A_np @ B_np
+    if verbose:
+        err = np.abs(C_result - C_oracle).max()
+        print(f"SUMMA majors={majors} grid={grid} ni,nj,nk=({ni},{nj},{nk}) "
+              f"time={elapsed*1e3:.2f}ms max_err={err:.2e}")
+    return C_result, C_oracle
+
+
 def main():
     from repro.configs.gemm_case_study import DATASETS, LAYOUT_CONFIGS
 
@@ -118,12 +221,18 @@ def main():
     ap.add_argument("--dataset", default="MINI", choices=list(DATASETS))
     ap.add_argument("--majors", default=None, help="e.g. J/K/J; default: all 8")
     ap.add_argument("--ranks", type=int, default=None)
+    ap.add_argument("--summa", action="store_true", help="2-D-grid SUMMA instead of 1-D")
+    ap.add_argument("--grid", default="2x4", help="SUMMA grid rows x cols")
     args = ap.parse_args()
 
     ni, nj, nk = DATASETS[args.dataset]
     configs = [args.majors] if args.majors else LAYOUT_CONFIGS
     for majors in configs:
-        C, ref = run_distributed_gemm(ni=ni, nj=nj, nk=nk, majors=majors, ranks=args.ranks, verbose=True)
+        if args.summa:
+            grid = tuple(int(x) for x in args.grid.split("x"))
+            C, ref = run_summa_gemm(ni=ni, nj=nj, nk=nk, majors=majors, grid=grid, verbose=True)
+        else:
+            C, ref = run_distributed_gemm(ni=ni, nj=nj, nk=nk, majors=majors, ranks=args.ranks, verbose=True)
         np.testing.assert_allclose(C, ref, rtol=1e-3, atol=1e-3)
     print("all configurations validated")
 

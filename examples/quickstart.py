@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    bag, idx, traverser, fix, mpi_traverser, scatter, gather, rank_map,
+    bag, idx, traverser, fix, make_mesh, mpi_traverser, scatter, gather, rank_map,
     relayout_plan, transfer_kind,
 )
 from repro.core.layout import scalar, vector, into_blocks, blocked
@@ -51,7 +51,7 @@ print(f"col->tiled is kind={transfer_kind(col_major, tiled)!r} (still no copy lo
 assert A[idx(i=4, j=2)] == B[idx(i=4, j=2)] == A.to_layout(tiled)[idx(i=4, j=2)]
 
 print("\n== 4. layout-agnostic scatter over 8 'ranks' ==")
-mesh = jax.make_mesh((8,), ("r",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("r",))
 big = scalar(np.float32) ^ vector("i", 8) ^ vector("j", 16)
 root_layout = big ^ into_blocks("j", "R", num_blocks=8)
 root = bag(root_layout, jnp.arange(128, dtype=jnp.float32))
@@ -68,7 +68,7 @@ from repro.models import lm
 from repro.models.sharding import make_recipe
 
 cfg = configs.get("phi4-mini-3.8b", smoke=True)
-mesh2 = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh2 = make_mesh((4, 2), ("data", "model"))
 recipe = make_recipe(cfg, mesh2)
 specs = lm.build_specs(cfg)
 pspecs = recipe.param_pspecs(specs)

@@ -51,8 +51,8 @@ ocfg = OptConfig(lr=3e-4, warmup_steps=20, total_steps=args.steps)
 
 recipe = None
 if args.devices > 1:
-    mesh = jax.make_mesh((args.devices // 2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.core.compat import make_mesh
+    mesh = make_mesh((args.devices // 2, 2), ("data", "model"))
     recipe = make_recipe(CFG, mesh)
     print(f"mesh {dict(mesh.shape)}, attn_mode={recipe.attn_mode}, bindings={recipe.bindings}")
 

@@ -7,9 +7,32 @@ Public API mirrors the paper's vocabulary:
 * bags:       :func:`bag` / :class:`Bag` — buffer + layout, logical indexing
 * traversers: :func:`traverser` ^ ``hoist/fix/span/bcast/merge_blocks``
 * relayout:   :func:`relayout` — the MPI-datatype-construction analogue
-* dist:       :func:`mpi_traverser` -> :class:`DistTraverser`; layout-agnostic
-              ``scatter/gather/broadcast`` and sharding derivation
+* dist:       :func:`mpi_traverser` / :func:`mpi_cart_traverser` ->
+              :class:`DistTraverser`; layout-agnostic collectives, p2p and
+              sharding derivation
+
+Paper section -> module map:
+
+=========  =======================================  =============================
+Section    Paper concept                            Module
+=========  =======================================  =============================
+§2         structures, bags, traversers             ``layout``, ``bag``,
+                                                    ``traverser``
+§3.1       MPI datatype derivation & taxonomy       ``relayout``
+                                                    (``transfer_kind``)
+§3.2       signature/type safety                    ``dims`` (``LayoutError``,
+                                                    ``check_same_space``)
+§4.1       MPI traverser, rank binding,             ``dist`` (``mpi_traverser``,
+           communicator grids / Comm_split          ``mpi_cart_traverser``,
+                                                    ``DistTraverser.sub``)
+§4.2       collectives (scatter/gather/bcast,       ``collectives``
+           allreduce/reduce_scatter/alltoall)
+§4.3       point-to-point send/recv, ring shifts    ``p2p``
+§5         layout-parametric distributed GEMM       ``repro.kernels.gemm`` +
+                                                    ``examples/distributed_gemm``
+=========  =======================================  =============================
 """
+from .compat import make_mesh, shard_map
 from .dims import LayoutError, common_refinement
 from .layout import (
     Axis,
@@ -39,8 +62,20 @@ from .traverser import (
 from .traverser import hoist as hoist_trav
 from .traverser import set_length as set_length_trav
 from .relayout import RelayoutPlan, relayout, relayout_plan, transfer_kind
-from .dist import DistTraverser, mpi_traverser
-from .collectives import DistBag, scatter, gather, broadcast, all_gather_bag, reduce_scatter_bag, rank_map
+from .dist import DistTraverser, mpi_traverser, mpi_cart_traverser
+from .collectives import (
+    DistBag,
+    scatter,
+    gather,
+    broadcast,
+    all_gather_bag,
+    all_reduce_bag,
+    reduce_scatter_bag,
+    all_to_all_bag,
+    dist_full,
+    rank_map,
+)
+from .p2p import send_recv, permute, ring_shift
 
 __all__ = [
     "LayoutError",
@@ -76,11 +111,20 @@ __all__ = [
     "transfer_kind",
     "DistTraverser",
     "mpi_traverser",
+    "mpi_cart_traverser",
+    "make_mesh",
+    "shard_map",
     "scatter",
     "gather",
     "broadcast",
     "all_gather_bag",
+    "all_reduce_bag",
     "reduce_scatter_bag",
+    "all_to_all_bag",
+    "dist_full",
     "rank_map",
     "DistBag",
+    "send_recv",
+    "permute",
+    "ring_shift",
 ]

@@ -11,17 +11,25 @@ Index-space type checks (paper: "the index space of the distributed structure
 has to be a subspace of the root structure index space, and the difference
 has to be covered by the dimension bound to the communicator") happen at
 trace time and raise :class:`LayoutError`.
+
+A :class:`DistBag` may be distributed over *several* ranking dimensions at
+once (a communicator grid, e.g. ``('rows', 'cols')`` — the paper's
+``MPI_Cart_create``).  Every collective then names the ranking dimension it
+operates along; the remaining grid dimensions act as independent
+sub-communicators, exactly like ``MPI_Comm_split`` keyed by the other grid
+coordinates.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .bag import Bag
+from .compat import shard_map
 from .dims import LayoutError, check_same_space, prod
 from .layout import Axis, Layout
 from .relayout import relayout
@@ -33,35 +41,80 @@ __all__ = [
     "gather",
     "broadcast",
     "all_gather_bag",
+    "all_reduce_bag",
     "reduce_scatter_bag",
+    "all_to_all_bag",
+    "dist_full",
     "rank_map",
 ]
+
+_REDUCERS = {
+    "add": jax.lax.psum,
+    "mean": jax.lax.psum,
+    "max": jax.lax.pmax,
+    "min": jax.lax.pmin,
+}
 
 
 @dataclasses.dataclass(frozen=True)
 class DistBag:
     """A bag scattered over the ranks of a DistTraverser.
 
-    ``data`` is the *global* array of shape ``(R, *tile_shape)`` whose leading
-    axis is sharded over the communicator's mesh axes — each device holds
-    exactly its tile, already in ``tile_layout``.
+    ``data`` is the *global* array of shape ``(R1, ..., Rk, *tile_shape)``
+    whose leading axes (one per ranking dim) are sharded over the
+    communicator's mesh axes — each device holds exactly its tile, already in
+    ``tile_layout``.
     """
 
     data: Any
     tile_layout: Layout
     dt: DistTraverser
-    rank_dim: str
+    rank_dims: tuple[str, ...]
+
+    def __post_init__(self):
+        if isinstance(self.rank_dims, str):  # tolerate the pre-grid call style
+            object.__setattr__(self, "rank_dims", (self.rank_dims,))
+
+    @property
+    def rank_dim(self) -> str:
+        """The single ranking dim (1-D communicators; errors on grids)."""
+        if len(self.rank_dims) != 1:
+            raise LayoutError(
+                f"DistBag spans communicator grid {self.rank_dims}; name the dim explicitly"
+            )
+        return self.rank_dims[0]
 
     @property
     def comm_size(self) -> int:
-        return self.dt.comm_size(self.rank_dim)
+        return prod(self.dt.comm_size(d) for d in self.rank_dims)
 
-    def tile(self, rank: int) -> Bag:
-        """Host-side view of one rank's tile (reference semantics, tests)."""
-        return Bag(self.data[rank], self.tile_layout)
+    @property
+    def grid_shape(self) -> tuple[int, ...]:
+        return tuple(self.dt.comm_size(d) for d in self.rank_dims)
+
+    def tile(self, rank: int | Sequence[int]) -> Bag:
+        """Host-side view of one rank's tile (reference semantics, tests).
+
+        ``rank`` is an int for 1-D communicators, a coordinate tuple on grids.
+        """
+        coords = (rank,) if isinstance(rank, int) else tuple(rank)
+        if len(coords) != len(self.rank_dims):
+            raise LayoutError(f"rank {rank!r} does not address grid {self.rank_dims}")
+        return Bag(self.data[coords], self.tile_layout)
 
     def with_data(self, data) -> "DistBag":
         return dataclasses.replace(self, data=data)
+
+
+# -----------------------------------------------------------------------------
+# shared plumbing
+# -----------------------------------------------------------------------------
+def _as_rank_dims(dt: DistTraverser, rank_dim) -> tuple[str, ...]:
+    if rank_dim is None:
+        return dt.rank_dims
+    if isinstance(rank_dim, str):
+        return (rank_dim,)
+    return tuple(rank_dim)
 
 
 def _transfer_layout(tile: Layout, leaves: tuple[tuple[str, int], ...]) -> Layout:
@@ -74,8 +127,17 @@ def _transfer_layout(tile: Layout, leaves: tuple[tuple[str, int], ...]) -> Layou
     return Layout(tile.dtype, axes, dim_map)
 
 
-def _check_scatter_spaces(root: Layout, tile: Layout, dt: DistTraverser, rank_dim: str) -> None:
-    leaves = dt.rank_leaves(rank_dim)
+def _all_leaves(dt: DistTraverser, rank_dims: Sequence[str]) -> tuple[tuple[str, int], ...]:
+    out: tuple[tuple[str, int], ...] = ()
+    for d in rank_dims:
+        out += dt.rank_leaves(d)
+    return out
+
+
+def _check_scatter_spaces(
+    root: Layout, tile: Layout, dt: DistTraverser, rank_dims: Sequence[str]
+) -> None:
+    leaves = _all_leaves(dt, rank_dims)
     expected = dict(tile.index_space())
     for leaf, size in leaves:
         if leaf in expected:
@@ -89,36 +151,84 @@ def _check_scatter_spaces(root: Layout, tile: Layout, dt: DistTraverser, rank_di
             raise LayoutError(f"traverser dim {d!r} extent {trav_space[d]} != tile {s}")
 
 
-def _rank_axes_spec(dt: DistTraverser, rank_dim: str, tile_ndim: int) -> P:
+def _grid_spec(dt: DistTraverser, rank_dims: Sequence[str], tile_ndim: int) -> P:
+    entries = []
+    for d in rank_dims:
+        axs = dt.rank_mesh_axes(d)
+        entries.append(axs if len(axs) > 1 else axs[0])
+    return P(*entries, *([None] * tile_ndim))
+
+
+def _lead_shape(dt: DistTraverser, rank_dims: Sequence[str]) -> tuple[int, ...]:
+    return tuple(dt.comm_size(d) for d in rank_dims)
+
+
+def _flat_rank(dt: DistTraverser, rank_dim: str):
+    """Traced communicator rank along one ranking dim (MPI_Comm_rank)."""
+    rank = 0
+    for ax in dt.rank_mesh_axes(rank_dim):
+        rank = rank * dt.mesh.shape[ax] + jax.lax.axis_index(ax)
+    return rank
+
+
+def _reduce_axes(dt: DistTraverser, rank_dim: str):
     axs = dt.rank_mesh_axes(rank_dim)
-    lead = axs if len(axs) > 1 else axs[0]
-    return P(lead, *([None] * tile_ndim))
+    return axs if len(axs) > 1 else axs[0]
 
 
-def scatter(root: Bag, tile_layout: Layout, dt: DistTraverser, rank_dim: str | None = None) -> DistBag:
+def _shard_collective(
+    dist: DistBag, out_layout: Layout, tile_fn: Callable[[Any], Any]
+) -> DistBag:
+    """Run ``tile_fn(local_tile) -> out_tile`` on every rank inside shard_map."""
+    dt, rank_dims = dist.dt, dist.rank_dims
+    lead = len(rank_dims)
+    in_spec = _grid_spec(dt, rank_dims, dist.tile_layout.ndim)
+    out_spec = _grid_spec(dt, rank_dims, out_layout.ndim)
+
+    def shard_fn(x):
+        t = x.reshape(dist.tile_layout.shape)
+        out = tile_fn(t)
+        return out.reshape((1,) * lead + out_layout.shape)
+
+    mapped = shard_map(shard_fn, mesh=dt.mesh, in_specs=(in_spec,), out_specs=out_spec)(
+        dist.data
+    )
+    return DistBag(mapped, out_layout, dt, rank_dims)
+
+
+# -----------------------------------------------------------------------------
+# root <-> tiles (scatter / gather / broadcast)
+# -----------------------------------------------------------------------------
+def scatter(
+    root: Bag,
+    tile_layout: Layout,
+    dt: DistTraverser,
+    rank_dim: str | Sequence[str] | None = None,
+) -> DistBag:
     """Scatter ``root`` so each rank holds one tile in ``tile_layout``.
 
     Works for arbitrary (root layout, tile layout) pairs over the same logical
     space — including different dimension orders and blockings on the two
-    sides; the relayout is fused into the scatter by XLA.
+    sides; the relayout is fused into the scatter by XLA.  With a grid
+    traverser, ``rank_dim`` may list several ranking dims (default: all of
+    them) and the tiles distribute over the full communicator grid.
     """
-    rank_dim = rank_dim or dt.rank_dims[0]
-    _check_scatter_spaces(root.layout, tile_layout, dt, rank_dim)
-    leaves = dt.rank_leaves(rank_dim)
+    rank_dims = _as_rank_dims(dt, rank_dim)
+    _check_scatter_spaces(root.layout, tile_layout, dt, rank_dims)
+    leaves = _all_leaves(dt, rank_dims)
     xfer = _transfer_layout(tile_layout, leaves)
     arr = relayout(root.data, root.layout, xfer)
-    R = prod(s for _, s in leaves)
-    arr = arr.reshape((R,) + tile_layout.shape)
-    sharding = NamedSharding(dt.mesh, _rank_axes_spec(dt, rank_dim, tile_layout.ndim))
+    arr = arr.reshape(_lead_shape(dt, rank_dims) + tile_layout.shape)
+    sharding = NamedSharding(dt.mesh, _grid_spec(dt, rank_dims, tile_layout.ndim))
     arr = jax.device_put(arr, sharding)
-    return DistBag(arr, tile_layout, dt, rank_dim)
+    return DistBag(arr, tile_layout, dt, rank_dims)
 
 
 def gather(dist: DistBag, root_layout: Layout) -> Bag:
     """Gather the tiles back into a root bag with ``root_layout`` (any layout
     spanning the same global logical space)."""
-    _check_scatter_spaces(root_layout, dist.tile_layout, dist.dt, dist.rank_dim)
-    leaves = dist.dt.rank_leaves(dist.rank_dim)
+    _check_scatter_spaces(root_layout, dist.tile_layout, dist.dt, dist.rank_dims)
+    leaves = _all_leaves(dist.dt, dist.rank_dims)
     xfer = _transfer_layout(dist.tile_layout, leaves)
     arr = dist.data.reshape(xfer.shape)
     out = relayout(arr, xfer, root_layout)
@@ -144,45 +254,260 @@ def all_gather_bag(dist: DistBag, root_layout: Layout) -> Bag:
     return gather(dist, root_layout)  # single-controller: gather is replicated
 
 
+def dist_full(
+    dt: DistTraverser,
+    tile_layout: Layout,
+    *,
+    fill: Any = 0.0,
+    rank_dim: str | Sequence[str] | None = None,
+) -> DistBag:
+    """Allocate a DistBag with every tile filled with ``fill`` (the
+    distributed counterpart of :func:`repro.core.bag`)."""
+    rank_dims = _as_rank_dims(dt, rank_dim)
+    shape = _lead_shape(dt, rank_dims) + tile_layout.shape
+    arr = jnp.full(shape, fill, dtype=tile_layout.dtype)
+    sharding = NamedSharding(dt.mesh, _grid_spec(dt, rank_dims, tile_layout.ndim))
+    return DistBag(jax.device_put(arr, sharding), tile_layout, dt, rank_dims)
+
+
+# -----------------------------------------------------------------------------
+# reduce collectives (MPI_Allreduce / MPI_Reduce_scatter / MPI_Alltoall)
+# -----------------------------------------------------------------------------
+def _resolve_reduce(op: str):
+    if op not in _REDUCERS:
+        raise LayoutError(f"unknown reduce op {op!r} (have {sorted(_REDUCERS)})")
+    return _REDUCERS[op]
+
+
+def all_reduce_bag(
+    dist: DistBag,
+    op: str = "add",
+    *,
+    rank_dim: str | None = None,
+    out_tile_layout: Layout | None = None,
+) -> DistBag:
+    """Reduce tiles elementwise across the ``rank_dim`` communicator; every
+    rank of that communicator ends with the same reduced tile (MPI_Allreduce).
+
+    ``out_tile_layout`` may differ from the input tile layout — the relayout
+    fuses into the same XLA program as the reduction.
+    """
+    rank_dim = rank_dim or dist.rank_dims[0]
+    if rank_dim not in dist.rank_dims:
+        raise LayoutError(f"bag is not distributed over {rank_dim!r} (has {dist.rank_dims})")
+    out_layout = out_tile_layout or dist.tile_layout
+    check_same_space(
+        dist.tile_layout.index_space(), out_layout.index_space(), what="all_reduce"
+    )
+    reducer = _resolve_reduce(op)
+    axes = _reduce_axes(dist.dt, rank_dim)
+    R = dist.dt.comm_size(rank_dim)
+
+    def tile_fn(t):
+        red = reducer(t, axes)
+        if op == "mean":
+            red = red / R
+        return relayout(red, dist.tile_layout, out_layout)
+
+    return _shard_collective(dist, out_layout, tile_fn)
+
+
+def _fresh_axis_name(layout: Layout, base: str) -> str:
+    name = base
+    while any(a.name == name for a in layout.axes) or any(d == name for d, _ in layout.dim_map):
+        name += "_"
+    return name
+
+
+def _block_over(layout: Layout, dim: str, name: str, R: int) -> Layout:
+    """``layout`` with a new outermost axis of size ``R`` enumerating the R
+    outer blocks of logical ``dim`` (so the result spans ``dim`` extent * R)."""
+    axes = (Axis(name, R),) + layout.axes
+    dim_map = tuple(
+        (d, ((name,) + axs) if d == dim else axs) for d, axs in layout.dim_map
+    )
+    return Layout(layout.dtype, axes, dim_map)
+
+
 def reduce_scatter_bag(
-    dist_bags: DistBag, op: str = "add"
-) -> DistBag:  # pragma: no cover - thin wrapper, exercised in dist tests
-    raise NotImplementedError("use rank_map with jax.lax.psum_scatter for custom reductions")
+    dist: DistBag,
+    out_tile_layout: Layout,
+    *,
+    scatter_dim: str | None = None,
+    op: str = "add",
+    rank_dim: str | None = None,
+) -> DistBag:
+    """Elementwise-reduce tiles across the ``rank_dim`` communicator, then
+    scatter the result: communicator rank ``r`` keeps logical block ``r`` of
+    ``scatter_dim`` (MPI_Reduce_scatter_block).
+
+    The output tile layout is free — rank ``r``'s block lands directly in
+    ``out_tile_layout``, with the transform fused into the transfer.  Index
+    spaces are checked at trace time: the output space must equal the input
+    space except that ``scatter_dim``'s extent shrinks by the communicator
+    size.
+    """
+    rank_dim = rank_dim or dist.rank_dims[0]
+    if rank_dim not in dist.rank_dims:
+        raise LayoutError(f"bag is not distributed over {rank_dim!r} (has {dist.rank_dims})")
+    R = dist.dt.comm_size(rank_dim)
+    in_space = dist.tile_layout.index_space()
+    out_space = out_tile_layout.index_space()
+    if scatter_dim is None:
+        cands = [
+            d for d, s in in_space.items() if out_space.get(d, -1) * R == s
+        ]
+        if len(cands) != 1:
+            raise LayoutError(
+                f"cannot infer scatter dim from {in_space} -> {out_space} "
+                f"with comm size {R} (candidates: {cands}); pass scatter_dim"
+            )
+        (scatter_dim,) = cands
+    expected = dict(out_space)
+    if scatter_dim not in expected:
+        raise LayoutError(f"scatter dim {scatter_dim!r} missing from output space {out_space}")
+    expected[scatter_dim] = expected[scatter_dim] * R
+    check_same_space(in_space, expected, what=f"reduce_scatter over {scatter_dim!r}")
+    _resolve_reduce(op)
+    blk = _fresh_axis_name(out_tile_layout, "__rs")
+    mid = _block_over(out_tile_layout, scatter_dim, blk, R)
+    axes = _reduce_axes(dist.dt, rank_dim)
+
+    def tile_fn(t):
+        x = relayout(t, dist.tile_layout, mid)  # (R, *out_shape), block r = rank r's part
+        if op in ("add", "mean"):
+            y = jax.lax.psum_scatter(x, axes, scatter_dimension=0, tiled=False)
+            if op == "mean":
+                y = y / R
+        else:
+            red = _REDUCERS[op](x, axes)
+            y = jax.lax.dynamic_index_in_dim(
+                red, _flat_rank(dist.dt, rank_dim), axis=0, keepdims=False
+            )
+        return y
+
+    return _shard_collective(dist, out_tile_layout, tile_fn)
 
 
+def _dense_layout(dtype, items: Sequence[tuple[str, int]]) -> Layout:
+    """Row-major layout over ``items`` (dim, extent) pairs, outer..inner."""
+    axes = tuple(Axis(d, s) for d, s in items)
+    dim_map = tuple((d, (d,)) for d, _ in items)
+    return Layout(dtype, axes, dim_map)
+
+
+def all_to_all_bag(
+    dist: DistBag,
+    out_tile_layout: Layout,
+    *,
+    split_dim: str,
+    concat_dim: str,
+    rank_dim: str | None = None,
+) -> DistBag:
+    """MPI_Alltoall along the ``rank_dim`` communicator: each rank splits its
+    tile into R blocks of ``split_dim``, sends block ``j`` to rank ``j``, and
+    concatenates the received blocks (in rank order) along ``concat_dim``.
+
+    This is the layout-agnostic reshard primitive: a bag tiled along one
+    logical dim becomes tiled along another, with both endpoint tile layouts
+    chosen freely.  Trace-time checks: ``split_dim`` shrinks by R,
+    ``concat_dim`` grows by R, everything else matches.
+    """
+    if split_dim == concat_dim:
+        raise LayoutError("all_to_all: split_dim and concat_dim must differ")
+    rank_dim = rank_dim or dist.rank_dims[0]
+    if rank_dim not in dist.rank_dims:
+        raise LayoutError(f"bag is not distributed over {rank_dim!r} (has {dist.rank_dims})")
+    R = dist.dt.comm_size(rank_dim)
+    in_space = dist.tile_layout.index_space()
+    out_space = out_tile_layout.index_space()
+    expected = dict(out_space)
+    for d in (split_dim, concat_dim):
+        if d not in expected:
+            raise LayoutError(f"dim {d!r} missing from output space {out_space}")
+    if in_space.get(split_dim) != out_space[split_dim] * R:
+        raise LayoutError(
+            f"all_to_all: split dim {split_dim!r} must shrink by comm size {R}: "
+            f"{in_space.get(split_dim)} -> {out_space[split_dim]}"
+        )
+    if in_space.get(concat_dim, -1) * R != out_space[concat_dim]:
+        raise LayoutError(
+            f"all_to_all: concat dim {concat_dim!r} must grow by comm size {R}: "
+            f"{in_space.get(concat_dim)} -> {out_space[concat_dim]}"
+        )
+    expected[split_dim] = out_space[split_dim] * R
+    expected[concat_dim] = out_space[concat_dim] // R
+    check_same_space(in_space, expected, what="all_to_all")
+
+    # canonical dense layout of one exchanged piece (any order works; the
+    # endpoint relayouts absorb it)
+    piece = _dense_layout(
+        dist.tile_layout.dtype,
+        [
+            (d, out_space[split_dim] if d == split_dim else in_space[d])
+            for d in in_space
+        ],
+    )
+    blk = _fresh_axis_name(piece, "__aa")
+    send_l = _block_over(piece, split_dim, blk, R)  # spans the input tile space
+    recv_l = _block_over(piece, concat_dim, blk, R)  # spans the output tile space
+    axes = _reduce_axes(dist.dt, rank_dim)
+
+    def tile_fn(t):
+        x = relayout(t, dist.tile_layout, send_l)  # (R, *piece)
+        y = jax.lax.all_to_all(x, axes, split_axis=0, concat_axis=0, tiled=False)
+        return relayout(y, recv_l, out_tile_layout)
+
+    return _shard_collective(dist, out_tile_layout, tile_fn)
+
+
+# -----------------------------------------------------------------------------
+# per-rank compute
+# -----------------------------------------------------------------------------
 def rank_map(
     fn: Callable[..., Any],
     dt: DistTraverser,
     *dist_bags: DistBag,
     out_tile_layout: Layout | None = None,
-    rank_dim: str | None = None,
+    rank_dim: str | Sequence[str] | None = None,
 ) -> DistBag:
-    """Run ``fn(rank_index, *tile_bags) -> tile_bag_or_array`` on every rank.
+    """Run ``fn(rank, *tile_bags) -> tile_bag_or_array`` on every rank.
 
     The per-rank computation sees plain :class:`Bag` tiles in their declared
     layouts (paper Listing 5's ``modify(tile[state])``).  Implemented with
-    ``jax.shard_map`` over the communicator's mesh axes; the rank index is
+    ``shard_map`` over the communicator's mesh axes; the rank index is
     reconstructed from the mesh axis indices exactly like ``MPI_Comm_rank``.
+
+    On a 1-D communicator ``rank`` is the integer rank; on a grid it is a
+    state dict ``{rank_dim: coordinate}`` (the paper's ``MPI_Cart_coords``).
+    Input bags may live on different traversers (e.g. operands of a SUMMA
+    step bound to different grid dims) as long as they share the mesh.
     """
-    rank_dim = rank_dim or dt.rank_dims[0]
-    mesh_axes = dt.rank_mesh_axes(rank_dim)
-    in_specs = tuple(_rank_axes_spec(dt, rank_dim, db.tile_layout.ndim) for db in dist_bags)
+    rank_dims = _as_rank_dims(dt, rank_dim)
+    for db in dist_bags:
+        if db.dt.mesh is not dt.mesh and db.dt.mesh != dt.mesh:
+            raise LayoutError("rank_map: all bags must live on the same mesh")
+    in_specs = tuple(
+        _grid_spec(db.dt, db.rank_dims, db.tile_layout.ndim) for db in dist_bags
+    )
     out_layout = out_tile_layout or dist_bags[0].tile_layout
-    out_spec = _rank_axes_spec(dt, rank_dim, out_layout.ndim)
+    out_spec = _grid_spec(dt, rank_dims, out_layout.ndim)
+    lead = len(rank_dims)
 
     def shard_fn(*tiles):
-        rank = 0
-        for ax in mesh_axes:
-            rank = rank * dt.mesh.shape[ax] + jax.lax.axis_index(ax)
+        if lead == 1:
+            rank = _flat_rank(dt, rank_dims[0])
+        else:
+            rank = {d: _flat_rank(dt, d) for d in rank_dims}
         bags = [
             Bag(t.reshape(db.tile_layout.shape), db.tile_layout)
             for t, db in zip(tiles, dist_bags)
         ]
         out = fn(rank, *bags)
         out_arr = out.data if isinstance(out, Bag) else out
-        return out_arr.reshape((1,) + out_layout.shape)
+        return out_arr.reshape((1,) * lead + out_layout.shape)
 
-    mapped = jax.shard_map(
+    mapped = shard_map(
         shard_fn, mesh=dt.mesh, in_specs=in_specs, out_specs=out_spec
     )(*[db.data for db in dist_bags])
-    return DistBag(mapped, out_layout, dt, rank_dim)
+    return DistBag(mapped, out_layout, dt, rank_dims)

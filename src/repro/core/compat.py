@@ -1,0 +1,38 @@
+"""Version tolerance for the narrow slice of the JAX API the core uses.
+
+The reproduction targets both the pinned CI toolchain (jax 0.4.x, where
+``shard_map`` lives in ``jax.experimental`` and ``Mesh`` has no axis types)
+and newer releases (``jax.shard_map``, ``jax.make_mesh(..., axis_types=...)``).
+Everything else in the codebase goes through these two constructors so the
+difference is contained here.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+__all__ = ["make_mesh", "shard_map"]
+
+try:  # jax >= 0.4.35 as jax.experimental.shard_map; promoted to jax.shard_map later
+    shard_map = jax.shard_map  # type: ignore[attr-defined]
+except AttributeError:
+    from jax.experimental.shard_map import shard_map  # type: ignore[no-redef]
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], **kwargs):
+    """``jax.make_mesh`` with explicit Auto axis types where supported.
+
+    Newer jax defaults mesh axes to ``Explicit`` in some configurations, which
+    breaks ``shard_map``-based collectives; older jax has no ``axis_types``
+    parameter at all.  Request Auto when the enum exists, fall back otherwise.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                axis_shapes, axis_names, axis_types=(axis_type.Auto,) * len(tuple(axis_names)), **kwargs
+            )
+        except TypeError:
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)

@@ -22,7 +22,13 @@ from .dims import LayoutError, prod
 from .layout import Layout
 from .traverser import Traverser, set_length
 
-__all__ = ["DistTraverser", "mpi_traverser", "partition_spec", "named_sharding"]
+__all__ = [
+    "DistTraverser",
+    "mpi_traverser",
+    "mpi_cart_traverser",
+    "partition_spec",
+    "named_sharding",
+]
 
 MeshAxes = tuple[str, ...]
 
@@ -74,6 +80,25 @@ class DistTraverser:
         # dims (single-controller JAX sees all shards).
         return self.trav | fn
 
+    # -- sub-communicators (MPI_Comm_split / MPI_Cart_sub analogue) -----------------
+    def sub(self, *dims: str) -> "DistTraverser":
+        """Restrict the communicator to the named ranking dims.
+
+        The paper's ``MPI_Comm_split``: on a ``('rows', 'cols')`` grid,
+        ``dt.sub('rows')`` is the column communicator family — one independent
+        communicator per fixed ``cols`` coordinate, which is exactly how the
+        collectives treat the dropped dims.
+        """
+        known = dict(self.bindings)
+        missing = [d for d in dims if d not in known]
+        if missing:
+            raise LayoutError(f"sub{dims}: unknown rank dims {missing} (have {self.rank_dims})")
+        if not dims:
+            raise LayoutError("sub() needs at least one rank dim")
+        return dataclasses.replace(
+            self, bindings=tuple((d, axs) for d, axs in self.bindings if d in dims)
+        )
+
     # -- rank decomposition -----------------------------------------------------------
     def rank_leaves(self, dim: str) -> tuple[tuple[str, int], ...]:
         """Leaf dims (with extents) composing the ranking dim ``dim``
@@ -119,6 +144,47 @@ def mpi_traverser(
             f"axes {mesh_axes} have size {size}"
         )
     dt = DistTraverser(trav=trav, mesh=mesh, bindings=((rank_dim, mesh_axes),))
+    dt.trav._resolved_decomp()  # force early deduction errors (type safety)
+    return dt
+
+
+def mpi_cart_traverser(
+    bindings: Sequence[tuple[str, Sequence[str] | str]] | Mapping[str, Sequence[str] | str],
+    trav: Traverser,
+    mesh: Mesh,
+) -> DistTraverser:
+    """Bind several rank dims to disjoint mesh-axis groups — the paper's
+    ``MPI_Cart_create``: a communicator grid, e.g. ``[('Ri', 'rows'),
+    ('Cj', 'cols')]`` on a 2-D mesh.
+
+    Each rank dim's extent must equal (or, if open, is deduced as) the product
+    of its mesh axes.  Collectives then operate along one grid dim at a time;
+    :meth:`DistTraverser.sub` extracts the per-dim sub-communicator.
+    """
+    items = list(bindings.items()) if isinstance(bindings, Mapping) else list(bindings)
+    if not items:
+        raise LayoutError("mpi_cart_traverser needs at least one (rank dim, mesh axes) binding")
+    used: set[str] = set()
+    norm: list[tuple[str, MeshAxes]] = []
+    for rank_dim, axes in items:
+        mesh_axes = _as_axes(axes)
+        for ax in mesh_axes:
+            if ax not in mesh.shape:
+                raise LayoutError(f"mesh has no axis {ax!r} (has {tuple(mesh.axis_names)})")
+            if ax in used:
+                raise LayoutError(f"mesh axis {ax!r} bound to two rank dims")
+            used.add(ax)
+        size = prod(mesh.shape[ax] for ax in mesh_axes)
+        current = trav.dim_size(rank_dim)
+        if current is None:
+            trav = trav ^ set_length(rank_dim, size)
+        elif current != size:
+            raise LayoutError(
+                f"rank dim {rank_dim!r} has extent {current} but communicator "
+                f"axes {mesh_axes} have size {size}"
+            )
+        norm.append((rank_dim, mesh_axes))
+    dt = DistTraverser(trav=trav, mesh=mesh, bindings=tuple(norm))
     dt.trav._resolved_decomp()  # force early deduction errors (type safety)
     return dt
 

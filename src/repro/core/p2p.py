@@ -1,0 +1,129 @@
+"""Layout-agnostic point-to-point communication (paper §4.3).
+
+Send/recv is the most-used MPI feature; its layout-agnostic form says: the
+source rank holds a tile in one layout, the destination declares a possibly
+*different* layout, and the relayout plan — derived from the two layouts at
+trace time, exactly like the MPI-datatype construction of ``collectives`` —
+executes inside the same XLA program as the transfer (``jax.lax.ppermute``
+under ``shard_map``).
+
+All operations work along one ranking dim of a (possibly multi-dim) grid
+communicator; the other grid dims act as independent sub-communicators.  The
+ranking dim must bind to a single mesh axis (ppermute is per-axis); bind a
+merged rank dim through :func:`repro.core.dist.mpi_cart_traverser` and pick
+one of its dims instead.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .dims import LayoutError, check_same_space
+from .layout import Layout
+from .relayout import relayout
+from .collectives import DistBag, _shard_collective
+
+__all__ = ["send_recv", "permute", "ring_shift"]
+
+
+def _single_axis(dist: DistBag, rank_dim: str | None) -> tuple[str, str, int]:
+    rank_dim = rank_dim or dist.rank_dims[0]
+    if rank_dim not in dist.rank_dims:
+        raise LayoutError(f"bag is not distributed over {rank_dim!r} (has {dist.rank_dims})")
+    axes = dist.dt.rank_mesh_axes(rank_dim)
+    if len(axes) != 1:
+        raise LayoutError(
+            f"p2p along {rank_dim!r} needs a single mesh axis, got {axes}; "
+            "split the communicator (DistTraverser.sub / mpi_cart_traverser)"
+        )
+    return rank_dim, axes[0], dist.dt.comm_size(rank_dim)
+
+
+def _check_perm(perm: Sequence[tuple[int, int]], R: int) -> list[tuple[int, int]]:
+    pairs = [(int(s), int(d)) for s, d in perm]
+    for s, d in pairs:
+        if not (0 <= s < R and 0 <= d < R):
+            raise LayoutError(f"permute pair ({s}, {d}) out of range for comm size {R}")
+    srcs = [s for s, _ in pairs]
+    dsts = [d for _, d in pairs]
+    if len(set(srcs)) != len(srcs) or len(set(dsts)) != len(dsts):
+        raise LayoutError(f"permute pairs must have unique sources and destinations: {pairs}")
+    return pairs
+
+
+def _dst_layout(dist: DistBag, dst_tile_layout: Layout | None) -> Layout:
+    dst = dst_tile_layout or dist.tile_layout
+    check_same_space(
+        dist.tile_layout.index_space(), dst.index_space(), what="p2p endpoints"
+    )
+    return dst
+
+
+def permute(
+    dist: DistBag,
+    perm: Iterable[tuple[int, int]],
+    *,
+    rank_dim: str | None = None,
+    dst_tile_layout: Layout | None = None,
+) -> DistBag:
+    """Exchange tiles along ``rank_dim`` per the ``(src, dst)`` pairs.
+
+    Every pair is a matched send/recv; the endpoint layouts may differ
+    (``dst_tile_layout``) and the relayout fuses into the transfer.  Ranks
+    that no pair sends to receive a zero tile — the analogue of posting no
+    matching ``MPI_Recv``.
+    """
+    rank_dim, axis, R = _single_axis(dist, rank_dim)
+    pairs = _check_perm(list(perm), R)
+    dst = _dst_layout(dist, dst_tile_layout)
+
+    def tile_fn(t):
+        r = relayout(t, dist.tile_layout, dst)
+        return jax.lax.ppermute(r, axis, pairs)
+
+    return _shard_collective(dist, dst, tile_fn)
+
+
+def ring_shift(
+    dist: DistBag,
+    shift: int = 1,
+    *,
+    rank_dim: str | None = None,
+    dst_tile_layout: Layout | None = None,
+) -> DistBag:
+    """Rotate tiles along the ``rank_dim`` ring: rank ``r`` receives the tile
+    of rank ``r - shift`` (mod R) — MPI_Sendrecv in the classic ring pattern,
+    and the panel-rotation step of Cannon/SUMMA GEMMs."""
+    _, _, R = _single_axis(dist, rank_dim)
+    pairs = [(i, (i + shift) % R) for i in range(R)]
+    return permute(dist, pairs, rank_dim=rank_dim, dst_tile_layout=dst_tile_layout)
+
+
+def send_recv(
+    dist: DistBag,
+    *,
+    src: int,
+    dst: int,
+    rank_dim: str | None = None,
+    dst_tile_layout: Layout | None = None,
+) -> DistBag:
+    """One matched send/recv pair along ``rank_dim``: rank ``dst`` receives
+    rank ``src``'s tile, every other rank keeps its own.
+
+    All tiles of the result are in ``dst_tile_layout`` (the receiver's
+    declared layout); the source tile's transform — and the bystanders' —
+    ride inside the same XLA program as the ``ppermute`` transfer.
+    """
+    rank_dim, axis, R = _single_axis(dist, rank_dim)
+    _check_perm([(src, dst)], R)
+    dst_l = _dst_layout(dist, dst_tile_layout)
+
+    def tile_fn(t):
+        r = relayout(t, dist.tile_layout, dst_l)
+        recv = jax.lax.ppermute(r, axis, [(src, dst)])
+        me = jax.lax.axis_index(axis)
+        return jnp.where(me == dst, recv, r)
+
+    return _shard_collective(dist, dst_l, tile_fn)

@@ -30,12 +30,22 @@ from jax.experimental import pallas as pl
 __all__ = ["gemm_pallas"]
 
 
-def _gemm_kernel(a_ref, b_ref, c_ref, acc_ref, *, a_trans: bool, b_trans: bool, c_trans: bool, nk: int):
+def _gemm_kernel(a_ref, b_ref, *refs, a_trans: bool, b_trans: bool, c_trans: bool, nk: int, has_acc: bool):
+    if has_acc:
+        cin_ref, c_ref, acc_ref = refs
+    else:
+        cin_ref, (c_ref, acc_ref) = None, refs
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        if cin_ref is None:
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+        else:
+            cin = cin_ref[...]
+            if c_trans:
+                cin = cin.T
+            acc_ref[...] = cin.astype(jnp.float32)
 
     a = a_ref[...]
     if a_trans:
@@ -60,6 +70,7 @@ def _gemm_kernel(a_ref, b_ref, c_ref, acc_ref, *, a_trans: bool, b_trans: bool, 
 def gemm_pallas(
     a,
     b,
+    acc=None,
     *,
     majors: str = "I/I/K",  # C/A/B major dims, paper Fig. 3 labels
     bm: int = 256,
@@ -68,12 +79,14 @@ def gemm_pallas(
     interpret: bool = False,
     out_dtype=None,
 ):
-    """C = A @ B with per-operand physical orientation.
+    """C = A @ B (+ acc) with per-operand physical orientation.
 
     ``a``/``b`` are the *buffers* (already in their physical layout); the
     ``majors`` string says how to interpret them, e.g. ``"J/K/J"`` means C is
     j-major (buffer (j,i)), A is k-major (buffer (k,i)), B is j-major
-    (buffer (j,k)).
+    (buffer (j,k)).  ``acc``, if given, is a previous C buffer (same
+    orientation as the output) added into the accumulator — the epilogue-free
+    inner step of blocked/SUMMA GEMMs.
     """
     c_major, a_major, b_major = majors.upper().split("/")
     a_trans = a_major == "K"  # buffer (k, i) -> need transpose of tiles
@@ -113,19 +126,31 @@ def gemm_pallas(
     )
     out_dtype = out_dtype or a.dtype
     out_shape = (N, M) if c_trans else (M, N)
+    if acc is not None and tuple(acc.shape) != out_shape:
+        raise ValueError(f"acc shape {acc.shape} != output shape {out_shape} (majors={majors})")
 
     kernel = functools.partial(
-        _gemm_kernel, a_trans=a_trans, b_trans=b_trans, c_trans=c_trans, nk=nk
+        _gemm_kernel,
+        a_trans=a_trans,
+        b_trans=b_trans,
+        c_trans=c_trans,
+        nk=nk,
+        has_acc=acc is not None,
     )
+    in_specs = [a_spec, b_spec]
+    operands = [a, b]
+    if acc is not None:
+        in_specs.append(c_spec)
+        operands.append(acc)
     return pl.pallas_call(
         kernel,
         grid=(nm, nn, nk),
-        in_specs=[a_spec, b_spec],
+        in_specs=in_specs,
         out_specs=c_spec,
         out_shape=jax.ShapeDtypeStruct(out_shape, out_dtype),
         scratch_shapes=[_vmem((bm_, bn_), jnp.float32)],
         interpret=interpret,
-    )(a, b)
+    )(*operands)
 
 
 def _vmem(shape, dtype):

@@ -29,11 +29,11 @@ def _resolve(impl: str | None) -> str:
     return impl or default_impl()
 
 
-def gemm(a, b, *, majors: str = "I/I/K", impl: str | None = None, **kw):
+def gemm(a, b, acc=None, *, majors: str = "I/I/K", impl: str | None = None, **kw):
     impl = _resolve(impl)
     if impl == "ref":
-        return _ref.gemm_ref(a, b, majors=majors, out_dtype=kw.get("out_dtype"))
-    return gemm_pallas(a, b, majors=majors, interpret=(impl == "interpret"), **kw)
+        return _ref.gemm_ref(a, b, acc, majors=majors, out_dtype=kw.get("out_dtype"))
+    return gemm_pallas(a, b, acc, majors=majors, interpret=(impl == "interpret"), **kw)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, impl: str | None = None, mixed: bool | None = None, **kw):

@@ -12,9 +12,10 @@ import jax.numpy as jnp
 __all__ = ["gemm_ref", "attention_ref", "transpose_ref", "blockwise_attention_ref"]
 
 
-def gemm_ref(a, b, *, majors: str = "I/I/K", out_dtype=None):
+def gemm_ref(a, b, acc=None, *, majors: str = "I/I/K", out_dtype=None):
     """Reference for :func:`repro.kernels.gemm.gemm_pallas` (same buffer
-    conventions: majors = C/A/B major dims)."""
+    conventions: majors = C/A/B major dims; ``acc`` is a previous C buffer in
+    output orientation, added in f32)."""
     c_major, a_major, b_major = majors.upper().split("/")
     al = a.T if a_major == "K" else a  # -> logical (i, k)
     bl = b.T if b_major == "J" else b  # -> logical (k, j)
@@ -23,6 +24,8 @@ def gemm_ref(a, b, *, majors: str = "I/I/K", out_dtype=None):
     )
     if c_major == "J":
         c = c.T
+    if acc is not None:
+        c = c + acc.astype(jnp.float32)
     return c.astype(out_dtype or a.dtype)
 
 

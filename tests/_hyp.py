@@ -1,0 +1,93 @@
+"""Optional-hypothesis shim.
+
+Property tests import ``given / settings / st`` from here.  When hypothesis
+is installed (dev boxes, CI with the full requirements file) they get the
+real thing; otherwise a tiny deterministic fallback runs each property over a
+fixed number of seeded random examples, so ``pytest -x -q`` collects and
+passes on a bare interpreter.  The fallback implements exactly the strategy
+surface this suite uses: ``integers, booleans, sampled_from, lists,
+permutations, composite``.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only where hypothesis exists
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_SEED = 0xA5EED
+    _FALLBACK_MAX_EXAMPLES = 25  # keep the no-hypothesis path fast
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def example(self, rng: random.Random):
+            return self._sample(rng)
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(options):
+            opts = list(options)
+            return _Strategy(lambda rng: rng.choice(opts))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Strategy(
+                lambda rng: [
+                    elements.example(rng) for _ in range(rng.randint(min_size, max_size))
+                ]
+            )
+
+        @staticmethod
+        def permutations(values):
+            vals = list(values)
+            return _Strategy(lambda rng: rng.sample(vals, len(vals)))
+
+        @staticmethod
+        def composite(fn):
+            def build(*args, **kwargs):
+                def sample(rng):
+                    return fn(lambda s: s.example(rng), *args, **kwargs)
+
+                return _Strategy(sample)
+
+            return build
+
+    st = _St()
+
+    def settings(*, max_examples=100, **_ignored):
+        def deco(fn):
+            fn._hyp_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            n = min(getattr(fn, "_hyp_max_examples", 100), _FALLBACK_MAX_EXAMPLES)
+
+            def runner():  # zero-arg so pytest sees no fixture params
+                for i in range(n):
+                    rng = random.Random(_FALLBACK_SEED + i)
+                    drawn = [s.example(rng) for s in strategies]
+                    fn(*drawn)
+
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+
+        return deco
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -72,6 +72,7 @@ def test_crash_mid_write_preserves_previous(tmp_path):
     assert restored is not None
 
 
+@pytest.mark.slow  # 8-device reshard subprocess
 def test_elastic_restore_resharded(distributed):
     """Save under one mesh, restore under a different mesh (scale-down):
     the layout algebra re-derives shardings — contents must be identical."""
@@ -87,7 +88,8 @@ cfg = configs.get('phi4-mini-3.8b', smoke=True)
 params = lm.init_model(cfg, jax.random.PRNGKey(0))
 specs = lm.build_specs(cfg)
 
-mesh_a = jax.make_mesh((4, 2), ('data', 'model'), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.core.compat import make_mesh
+mesh_a = make_mesh((4, 2), ('data', 'model'))
 recipe_a = make_recipe(cfg, mesh_a)
 params_a = jax.tree.map(lambda x, s: jax.device_put(x, s), params, recipe_a.param_shardings(specs))
 
@@ -96,7 +98,7 @@ mgr = CheckpointManager(d)
 mgr.save(3, params_a)
 
 # "scale down": different mesh shape, different shardings
-mesh_b = jax.make_mesh((2, 2), ('data', 'model'), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh_b = make_mesh((2, 2), ('data', 'model'))
 recipe_b = make_recipe(cfg, mesh_b)
 restored, _ = mgr.restore(params, shardings=recipe_b.param_shardings(specs))
 for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):

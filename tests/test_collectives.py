@@ -1,5 +1,22 @@
 """Layout-agnostic collectives on an 8-device mesh (subprocess-isolated so
 the main pytest process keeps seeing 1 device)."""
+import inspect
+
+import pytest
+
+
+def test_collectives_api_is_complete_and_non_stub():
+    """Every exported collective is a real implementation: callable, and its
+    source contains no NotImplementedError stub (regression for the old
+    ``reduce_scatter_bag`` placeholder)."""
+    from repro.core import collectives, p2p
+
+    for mod in (collectives, p2p):
+        for name in mod.__all__:
+            obj = getattr(mod, name)
+            assert callable(obj), name
+            src = inspect.getsource(obj)
+            assert "NotImplementedError" not in src, f"{mod.__name__}.{name} is a stub"
 
 
 def test_scatter_gather_roundtrip_mixed_layouts(distributed):
@@ -12,7 +29,7 @@ from repro.core.layout import scalar, vector, into_blocks
 N, M = 8, 16
 col = scalar(np.float32) ^ vector('i', N) ^ vector('j', M)
 b_col = bag(col, jnp.arange(N*M, dtype=jnp.float32).reshape(M, N))
-mesh = jax.make_mesh((8,), ('r',), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ('r',))
 root_l = col ^ into_blocks('j', 'R', num_blocks=8)
 root = bag(root_l, b_col.data)
 # tile uses a DIFFERENT physical layout than the root (row-major)
@@ -46,7 +63,7 @@ import numpy as np, jax, jax.numpy as jnp
 from repro.core import *
 from repro.core.layout import scalar, vector, into_blocks
 
-mesh = jax.make_mesh((8,), ('r',), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ('r',))
 l = scalar(np.float32) ^ vector('i', 4) ^ vector('j', 16)
 root_l = l ^ into_blocks('j', 'R', num_blocks=8)
 root = bag(root_l, jnp.zeros((16, 4)))
@@ -70,7 +87,7 @@ import numpy as np, jax, jax.numpy as jnp
 from repro.core import *
 from repro.core.layout import scalar, vector
 
-mesh = jax.make_mesh((8,), ('r',), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ('r',))
 col = scalar(np.float32) ^ vector('i', 4) ^ vector('j', 6)
 row = scalar(np.float32) ^ vector('j', 6) ^ vector('i', 4)
 src = bag(col, jnp.arange(24.0).reshape(6, 4))
@@ -94,7 +111,7 @@ import numpy as np, jax, jax.numpy as jnp
 from repro.core import *
 from repro.core.layout import scalar, vector, into_blocks
 
-mesh = jax.make_mesh((8,), ('r',), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ('r',))
 col = scalar(np.float32) ^ vector('i', 4) ^ vector('j', 16)
 root_l = col ^ into_blocks('j', 'R', num_blocks=8)
 root = bag(root_l, jnp.zeros((8, 2, 4)))
@@ -123,6 +140,169 @@ print('OK')
     assert "OK" in out
 
 
+def test_all_reduce_mixed_layouts(distributed):
+    out = distributed(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import *
+from repro.core.layout import scalar, vector, into_blocks
+
+N, M = 4, 16
+col = scalar(np.float32) ^ vector('i', N) ^ vector('j', M)
+mesh = make_mesh((8,), ('r',))
+root = bag(col ^ into_blocks('j', 'R', num_blocks=8), jnp.arange(N*M, dtype=jnp.float32).reshape(M, N))
+tile_col = scalar(np.float32) ^ vector('i', N) ^ vector('j', M//8)
+tile_row = scalar(np.float32) ^ vector('j', M//8) ^ vector('i', N)
+dt = mpi_traverser('R', traverser(root), mesh)
+db = scatter(root, tile_col, dt)
+# allreduce with an output layout differing from the input tiles
+red = all_reduce_bag(db, 'add', out_tile_layout=tile_row)
+host = np.stack([np.asarray(db.tile(r).to_layout(tile_row).data) for r in range(8)]).sum(0)
+for r in range(8):
+    assert np.allclose(np.asarray(red.tile(r).data), host), r
+# max and mean reductions
+mx = all_reduce_bag(db, 'max')
+hostm = np.stack([np.asarray(db.tile(r).data) for r in range(8)]).max(0)
+for r in range(8):
+    assert np.allclose(np.asarray(mx.tile(r).data), hostm), r
+mn = all_reduce_bag(db, 'mean')
+for r in range(8):
+    assert np.allclose(np.asarray(mn.tile(r).data), np.stack([np.asarray(db.tile(q).data) for q in range(8)]).mean(0)), r
+print('OK')
+"""
+    )
+    assert "OK" in out
+
+
+def test_reduce_scatter_differing_endpoint_layouts(distributed):
+    """MPI_Reduce_scatter_block with the input tiles col-major and the output
+    tiles row-major: the transform is fused into the reduce+scatter, and rank
+    r holds logical block r of the scattered dim."""
+    out = distributed(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import *
+from repro.core.layout import scalar, vector, into_blocks
+
+N, M = 8, 16
+col = scalar(np.float32) ^ vector('i', N) ^ vector('j', M)
+mesh = make_mesh((8,), ('r',))
+root = bag(col ^ into_blocks('j', 'R', num_blocks=8), jnp.arange(N*M, dtype=jnp.float32).reshape(M, N))
+tile_col = scalar(np.float32) ^ vector('i', N) ^ vector('j', M//8)   # col-major in
+out_row  = scalar(np.float32) ^ vector('j', M//8) ^ vector('i', N//8)  # row-major out
+dt = mpi_traverser('R', traverser(root), mesh)
+db = scatter(root, tile_col, dt)
+rs = reduce_scatter_bag(db, out_row, scatter_dim='i')
+# host oracle: sum tiles logically, slice i-block r, compare via logical idx
+tile_sum = np.zeros((N, M//8), np.float32)  # [i, j]
+for r in range(8):
+    t = db.tile(r)
+    for i in range(N):
+        for j in range(M//8):
+            tile_sum[i, j] += float(t[idx(i=i, j=j)])
+for r in range(8):
+    got = rs.tile(r)
+    for i in range(N//8):
+        for j in range(M//8):
+            assert float(got[idx(i=i, j=j)]) == tile_sum[r * (N//8) + i, j], (r, i, j)
+# type safety: output space must shrink scatter_dim by the comm size
+try:
+    reduce_scatter_bag(db, tile_col, scatter_dim='i')
+    raise SystemExit('expected LayoutError')
+except LayoutError:
+    pass
+print('OK')
+"""
+    )
+    assert "OK" in out
+
+
+def test_all_to_all_reshard(distributed):
+    """MPI_Alltoall as the reshard primitive: tiles split along i, received
+    blocks concatenated along j, with a row-major output layout."""
+    out = distributed(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import *
+from repro.core.layout import scalar, vector, into_blocks
+
+N, M = 8, 16
+col = scalar(np.float32) ^ vector('i', N) ^ vector('j', M)
+mesh = make_mesh((8,), ('r',))
+root = bag(col ^ into_blocks('j', 'R', num_blocks=8), jnp.arange(N*M, dtype=jnp.float32).reshape(M, N))
+tile_col = scalar(np.float32) ^ vector('i', N) ^ vector('j', M//8)
+dt = mpi_traverser('R', traverser(root), mesh)
+db = scatter(root, tile_col, dt)
+aa_out = scalar(np.float32) ^ vector('j', M) ^ vector('i', N//8)  # row-major, resharded
+aa = all_to_all_bag(db, aa_out, split_dim='i', concat_dim='j')
+tiles = [np.zeros((N, M//8), np.float32) for _ in range(8)]
+for s in range(8):
+    t = db.tile(s)
+    for i in range(N):
+        for j in range(M//8):
+            tiles[s][i, j] = float(t[idx(i=i, j=j)])
+for r in range(8):
+    ref = np.concatenate([tiles[s][r:(r+1), :] for s in range(8)], axis=1)  # (1, M)
+    got = aa.tile(r)
+    for i in range(N//8):
+        for j in range(M):
+            assert float(got[idx(i=i, j=j)]) == ref[i, j], (r, i, j)
+# type safety: split and concat dims must differ
+try:
+    all_to_all_bag(db, aa_out, split_dim='i', concat_dim='i')
+    raise SystemExit('expected LayoutError')
+except LayoutError:
+    pass
+print('OK')
+"""
+    )
+    assert "OK" in out
+
+
+def test_summa_2d_grid_two_layout_configs(distributed):
+    """The tentpole end-to-end: 2-D-grid SUMMA (ring p2p rotation +
+    reduce_scatter epilogue) matches jnp.dot for two distinct
+    (A-layout, B-layout, C-layout) configurations."""
+    out = distributed(
+        """
+import numpy as np
+from examples.distributed_gemm import run_summa_gemm
+
+for majors in ["I/I/K", "J/K/J"]:
+    C, ref = run_summa_gemm(ni=16, nj=16, nk=8, majors=majors, grid=(2, 4))
+    np.testing.assert_allclose(C, ref, rtol=1e-4, atol=1e-4)
+print('OK')
+""",
+        timeout=560,
+    )
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_summa_2d_grid_all_layout_configs(distributed):
+    """All 8 C/A/B major configurations agree with the oracle and each other
+    on the 2-D grid (the paper's layouts-change-performance-not-semantics)."""
+    out = distributed(
+        """
+import numpy as np
+from examples.distributed_gemm import run_summa_gemm
+
+oracle = None
+for majors in ["I/I/K","I/I/J","I/K/K","I/K/J","J/I/K","J/I/J","J/K/K","J/K/J"]:
+    C, ref = run_summa_gemm(ni=16, nj=16, nk=8, majors=majors, grid=(2, 4))
+    np.testing.assert_allclose(C, ref, rtol=1e-4, atol=1e-4)
+    if oracle is None:
+        oracle = C
+    else:
+        np.testing.assert_allclose(C, oracle, rtol=1e-4, atol=1e-4)
+print('OK')
+""",
+        timeout=560,
+    )
+    assert "OK" in out
+
+
+@pytest.mark.slow
 def test_distributed_gemm_all_layout_configs(distributed):
     """The paper's case study end-to-end: scatter A/B/C tiles with
     independently chosen tile layouts, compute per rank, gather C — all 8

@@ -36,6 +36,7 @@ def _inputs(cfg, key):
 
 
 @pytest.mark.parametrize("arch", configs.ARCH_IDS)
+@pytest.mark.slow  # full decode loop per arch
 def test_decode_matches_forward(arch):
     import dataclasses
 

@@ -1,6 +1,9 @@
 """Distributed decode correctness: serving with the KV cache sharded over
 the mesh (seq over `model` = the GSPMD flash-decoding merge; batch over
 `data`) must produce the same logits as single-device decode."""
+import pytest
+
+pytestmark = pytest.mark.slow  # 8-device decode subprocess
 
 
 def test_decode_sharded_cache_matches_single_device(distributed):
@@ -32,7 +35,8 @@ for t in toks:
     ref_logits.append(np.asarray(lg, np.float32))
 
 # --- 4x2 mesh, cache sharded per the recipe ---
-mesh = jax.make_mesh((4, 2), ('data', 'model'), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.core.compat import make_mesh
+mesh = make_mesh((4, 2), ('data', 'model'))
 recipe = make_recipe(cfg, mesh)
 assert recipe.attn_mode in ('tp', 'sp')
 specs = lm.build_specs(cfg)

@@ -18,7 +18,8 @@ from repro.launch import hlo_walk
 
 cfg = configs.get('phi4-mini-3.8b', smoke=True)
 cell = ShapeCell('t', seq_len=128, global_batch=8, kind='train')
-mesh = jax.make_mesh((4, 2), ('data', 'model'), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.core.compat import make_mesh
+mesh = make_mesh((4, 2), ('data', 'model'))
 recipe = make_recipe(cfg, mesh)
 specs = lm.build_specs(cfg)
 params_abs = lm.abstract_model(cfg)

@@ -41,6 +41,24 @@ def test_gemm_shape_dtype_sweep(shape, dtype):
     np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(expect, np.float32), rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("majors", ["I/I/K", "J/K/J", "I/K/J", "J/I/K"])
+def test_gemm_accumulate_input(majors):
+    """The SUMMA inner-step path: C = acc + A @ B, with acc in the output
+    orientation, across multiple k blocks (acc must load exactly once)."""
+    M, N, K = 64, 48, 32
+    a, b = _gemm_operands(M, N, K, majors, jnp.float32)
+    c_shape = (N, M) if majors.split("/")[0] == "J" else (M, N)
+    acc = jnp.asarray(RNG.standard_normal(c_shape), jnp.float32)
+    out = ops.gemm(a, b, acc, majors=majors, impl="interpret", bm=32, bn=16, bk=16)
+    np.testing.assert_allclose(out, ref.gemm_ref(a, b, acc, majors=majors), rtol=1e-5, atol=1e-5)
+
+
+def test_gemm_acc_shape_mismatch_rejected():
+    a, b = _gemm_operands(32, 32, 32, "I/I/K", jnp.float32)
+    with pytest.raises(ValueError):
+        ops.gemm(a, b, jnp.zeros((16, 32), jnp.float32), majors="I/I/K", impl="interpret")
+
+
 def test_gemm_rejects_bad_blocks():
     a, b = _gemm_operands(30, 30, 30, "I/I/K", jnp.float32)
     with pytest.raises(ValueError):

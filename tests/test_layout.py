@@ -1,10 +1,11 @@
 """Unit + property tests for the layout algebra (the paper's §2/§3 semantics)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from _hyp import given, settings, st  # real hypothesis when installed, shim otherwise
 
 from repro.core import LayoutError, common_refinement
 from repro.core.layout import (

@@ -41,6 +41,7 @@ def test_forward_shapes_and_finiteness(arch):
 
 
 @pytest.mark.parametrize("arch", configs.ARCH_IDS)
+@pytest.mark.slow  # full backward per arch
 def test_one_train_step(arch):
     cfg = configs.get(arch, smoke=True)
     key = jax.random.PRNGKey(1)
@@ -91,6 +92,7 @@ def test_long_context_support_flags():
         assert ("long_500k" in cfg.supported_shapes()) == expect_long, arch
 
 
+@pytest.mark.slow  # two full MoE forwards
 def test_moe_grouped_dispatch_equivalence():
     """Grouped dispatch (the §Perf lever, now the MoE default at scale) must
     agree with the global dispatch when capacity is non-binding."""

@@ -36,6 +36,18 @@ def test_partition_spec_tuple_axes():
     assert spec == P(("pod", "model"))
 
 
+def test_named_sharding_on_session_mesh(session_mesh):
+    """named_sharding end to end on a real (1-device) mesh; the session-scoped
+    factory memoizes Mesh construction across tests."""
+    from repro.core.dist import named_sharding
+
+    mesh = session_mesh((1,), ("model",))
+    w = pspec(("m", 64), ("f", 128)).layout
+    ns = named_sharding(mesh, w, {"f": "model"})
+    assert ns.spec == P(None, "model")
+    assert session_mesh((1,), ("model",)) is mesh  # memoized, not rebuilt
+
+
 def test_partition_spec_blocked_dim_rejected():
     from repro.core.layout import blocked, merge_blocks as mb
 
@@ -58,7 +70,8 @@ import jax
 from repro import configs
 from repro.models.sharding import make_recipe
 
-mesh = jax.make_mesh((2, 4), ('data', 'model'), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.core.compat import make_mesh
+mesh = make_mesh((2, 4), ('data', 'model'))
 
 # qwen: 40 heads % 4 == 0 -> tp mode on this mesh
 cfg = configs.get('qwen2.5-32b')
@@ -81,6 +94,7 @@ print('OK')
     assert "OK" in out
 
 
+@pytest.mark.slow  # 8-device train subprocess
 def test_sharded_train_step_matches_single_device(distributed):
     """The whole point of SPMD: distributed step == single-device step."""
     out = distributed(
@@ -106,7 +120,8 @@ batch = jax.tree.map(jnp.asarray, make_batch(cfg, cell, 0, DataConfig(seed=4)))
 p_ref, o_ref, m_ref = jax.jit(make_train_step(cfg, None, ocfg))(params, opt, batch)
 
 # 4x2 mesh
-mesh = jax.make_mesh((4, 2), ('data', 'model'), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.core.compat import make_mesh
+mesh = make_mesh((4, 2), ('data', 'model'))
 recipe = make_recipe(cfg, mesh)
 specs = lm.build_specs(cfg)
 shard = recipe.param_shardings(specs)

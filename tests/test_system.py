@@ -1,6 +1,7 @@
 """End-to-end behaviour tests for the whole system (the paper's abstraction
 driving a real train/serve stack)."""
 import numpy as np
+import pytest
 
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -42,6 +43,7 @@ def test_paper_feature_matrix():
     }
 
 
+@pytest.mark.slow  # multi-step pretrain
 def test_end_to_end_tiny_pretrain():
     """Train a tiny model for 40 steps and check it learned the synthetic
     copy structure better than chance (system-level learning signal)."""

@@ -4,6 +4,8 @@ import dataclasses
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-second train/fault-injection runs
+
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 

@@ -6,7 +6,14 @@ reduce-scatter epilogue).
 Runs in a subprocess with 8 fake devices (mirroring the paper's 8-node
 cluster) and reports mean±std wall time over repeated runs, plus validation
 that every configuration produces identical results — the paper's check that
-layout choices change performance but never semantics."""
+layout choices change performance but never semantics.
+
+Each row also carries the analytic per-rank comm-volume model (the 1-D
+algorithm replicates B: O(n^2); the SUMMA ring moves panels:
+O(n^2/sqrt(P))), and the SUMMA rows report the measured overlap
+classification of the compiled ring — ``overlapped/total`` collective
+permutes off the compute def-use chain (measured once per dataset; the
+classification is majors-independent)."""
 import json
 import os
 import subprocess
@@ -20,18 +27,26 @@ import os, sys, time, json
 import numpy as np
 sys.path.insert(0, {src!r})
 sys.path.insert(0, {root!r})
-from examples.distributed_gemm import run_distributed_gemm, run_summa_gemm
+from examples.distributed_gemm import (
+    comm_volume_model, run_distributed_gemm, run_summa_gemm, summa_ring_program)
 from repro.configs.gemm_case_study import DATASETS, LAYOUT_CONFIGS
+from repro.launch import hlo_walk
 
+GRID = (2, 4)
 ALGOS = dict(
     panel1d=lambda ni, nj, nk, majors: run_distributed_gemm(ni=ni, nj=nj, nk=nk, majors=majors, ranks=8),
-    summa2d=lambda ni, nj, nk, majors: run_summa_gemm(ni=ni, nj=nj, nk=nk, majors=majors, grid=(2, 4)),
+    summa2d=lambda ni, nj, nk, majors: run_summa_gemm(ni=ni, nj=nj, nk=nk, majors=majors, grid=GRID),
 )
 results = []
 for dataset in {datasets!r}:
     ni, nj, nk = DATASETS[dataset]
+    overlap_cell = None
     for algo in {algos!r}:
         fn = ALGOS[algo]
+        if algo == "summa2d":
+            model = comm_volume_model("summa2d", ni=ni, nj=nj, nk=nk, grid=GRID)
+        else:
+            model = comm_volume_model("panel1d", ni=ni, nj=nj, nk=nk, ranks=8)
         for majors in LAYOUT_CONFIGS:
             times = []
             C = ref = None
@@ -44,8 +59,16 @@ for dataset in {datasets!r}:
                 C, ref = fn(ni, nj, nk, majors)
                 times.append(_t.perf_counter() - t0)
             np.testing.assert_allclose(C, ref, rtol=1e-3, atol=1e-3)
+            overlap = "-"
+            if algo == "summa2d":
+                if overlap_cell is None:  # once per dataset: majors-independent
+                    pfn, meta = summa_ring_program(ni=ni, nj=nj, nk=nk, grid=GRID, majors=majors)
+                    st = hlo_walk.analyze(pfn.lower(*meta["abstract_args"]).compile().as_text())
+                    overlap_cell = "%d/%d" % (st.permutes_overlapped, len(st.permutes))
+                overlap = overlap_cell
             results.append(dict(dataset=dataset, algo=algo, majors=majors,
-                                mean_s=float(np.mean(times)), std_s=float(np.std(times))))
+                                mean_s=float(np.mean(times)), std_s=float(np.std(times)),
+                                model_comm_bytes=model["total_bytes"], overlap=overlap))
 print("RESULTS_JSON=" + json.dumps(results))
 """
 
@@ -62,9 +85,10 @@ def run(datasets=("MINI", "EXTRALARGE"), reps=3, algos=("panel1d", "summa2d")) -
         raise RuntimeError(proc.stderr[-3000:])
     line = [l for l in proc.stdout.splitlines() if l.startswith("RESULTS_JSON=")][0]
     results = json.loads(line[len("RESULTS_JSON="):])
-    out = ["dataset,algo,majors,us_per_call,std_us"]
+    out = ["dataset,algo,majors,us_per_call,std_us,model_comm_bytes,overlap"]
     for r in results:
-        out.append(f"{r['dataset']},{r['algo']},{r['majors']},{r['mean_s']*1e6:.0f},{r['std_s']*1e6:.0f}")
+        out.append(f"{r['dataset']},{r['algo']},{r['majors']},{r['mean_s']*1e6:.0f},"
+                   f"{r['std_s']*1e6:.0f},{r['model_comm_bytes']},{r['overlap']}")
     return out
 
 

@@ -1,11 +1,19 @@
 """Aggregate the dry-run JSON records into the §Roofline table
-(benchmarks/results/*.json -> CSV + markdown)."""
+(benchmarks/results/*.json -> CSV + markdown).
+
+Also carries the GEMM communication-volume model table (``--gemm-model``):
+per-rank comm bytes of the 1-D row-panel algorithm (O(n^2), B replicated)
+vs the 2-D SUMMA ring (O(n^2/sqrt(P)) on a square grid), plus the measured
+collective-permute overlap classification of the compiled SUMMA trace.
+"""
 import glob
 import json
 import os
 import sys
 
 HERE = os.path.dirname(__file__)
+sys.path.insert(0, os.path.abspath(os.path.join(HERE, "..", "src")))
+sys.path.insert(0, os.path.abspath(os.path.join(HERE, "..")))
 
 
 def load_records(results_dir=None, mesh="singlepod", tag="baseline"):
@@ -16,22 +24,60 @@ def load_records(results_dir=None, mesh="singlepod", tag="baseline"):
     return recs
 
 
+def _overlap_cell(rf: dict) -> str:
+    """permute overlap as 'overlapped/total' counts; '-' when no permutes."""
+    n_over = rf.get("permutes_overlapped", 0)
+    n_ser = rf.get("permutes_serialized", 0)
+    if not n_over and not n_ser:
+        return "-"
+    return f"{n_over}/{n_over + n_ser}"
+
+
 def run(mesh="singlepod", tag="baseline") -> list[str]:
     recs = load_records(mesh=mesh, tag=tag)
-    out = ["arch,shape,status,t_compute_s,t_memory_s,t_collective_s,dominant,useful_ratio,roofline_fraction"]
+    out = ["arch,shape,status,t_compute_s,t_memory_s,t_collective_s,dominant,"
+           "useful_ratio,roofline_fraction,permute_overlap"]
     for r in recs:
         if r.get("status") == "skipped":
-            out.append(f"{r['arch']},{r['shape']},skipped,,,,,,")
+            out.append(f"{r['arch']},{r['shape']},skipped,,,,,,,")
             continue
         if r.get("status") != "ok":
-            out.append(f"{r['arch']},{r['shape']},FAILED,,,,,,")
+            out.append(f"{r['arch']},{r['shape']},FAILED,,,,,,,")
             continue
         rf = r["roofline"]
         out.append(
             f"{r['arch']},{r['shape']},ok,{rf['t_compute']:.4g},{rf['t_memory']:.4g},"
             f"{rf['t_collective']:.4g},{rf['dominant']},{rf['useful_ratio']:.3f},"
-            f"{rf['roofline_fraction']:.4f}"
+            f"{rf['roofline_fraction']:.4f},{_overlap_cell(rf)}"
         )
+    return out
+
+
+def gemm_model_rows(datasets=None, grid=(2, 4), measure_overlap=False) -> list[str]:
+    """The SUMMA comm-volume model table: per-rank bytes for both GEMM
+    algorithms on the case-study datasets.  With ``measure_overlap`` the
+    double-buffered SUMMA ring is lowered (8 fake devices must already be
+    configured) and the HLO overlap classification is appended."""
+    from examples.distributed_gemm import comm_volume_model
+    from repro.configs.gemm_case_study import DATASETS
+
+    R, Cc = grid
+    names = list(datasets) if datasets else list(DATASETS)
+    out = ["dataset,algo,ni,nj,nk,model_comm_bytes_per_rank,ring_bytes,overlap"]
+    for name in names:
+        ni, nj, nk = DATASETS[name]
+        m1 = comm_volume_model("panel1d", ni=ni, nj=nj, nk=nk, ranks=R * Cc)
+        out.append(f"{name},panel1d,{ni},{nj},{nk},{m1['total_bytes']},,-")
+        m2 = comm_volume_model("summa2d", ni=ni, nj=nj, nk=nk, grid=grid)
+        overlap = "-"
+        if measure_overlap:
+            from repro.launch import hlo_walk
+            from examples.distributed_gemm import summa_ring_program
+
+            fn, meta = summa_ring_program(ni=ni, nj=nj, nk=nk, grid=grid)
+            st = hlo_walk.analyze(fn.lower(*meta["abstract_args"]).compile().as_text())
+            overlap = f"{st.permutes_overlapped}/{len(st.permutes)}"
+        out.append(f"{name},summa2d,{ni},{nj},{nk},{m2['total_bytes']},{m2['ring_bytes']},{overlap}")
     return out
 
 
@@ -45,6 +91,21 @@ def markdown(mesh="singlepod", tag="baseline") -> str:
 
 
 if __name__ == "__main__":
-    mesh = sys.argv[1] if len(sys.argv) > 1 else "singlepod"
-    tag = sys.argv[2] if len(sys.argv) > 2 else "baseline"
-    print("\n".join(run(mesh, tag)))
+    argv = [a for a in sys.argv[1:]]
+    if "--gemm-model" in argv:
+        argv.remove("--gemm-model")
+        measure = "--measure-overlap" in argv
+        if measure:
+            argv.remove("--measure-overlap")
+            os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+        if argv:
+            raise SystemExit(f"unknown arguments with --gemm-model: {argv}")
+        print("\n".join(gemm_model_rows(measure_overlap=measure)))
+    else:
+        flags = [a for a in argv if a.startswith("-")]
+        if flags:
+            raise SystemExit(f"unknown flags {flags}; usage: roofline_table.py "
+                             "[mesh] [tag] | --gemm-model [--measure-overlap]")
+        mesh = argv[0] if argv else "singlepod"
+        tag = argv[1] if len(argv) > 1 else "baseline"
+        print("\n".join(run(mesh, tag)))

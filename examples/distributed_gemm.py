@@ -9,11 +9,25 @@ C = A @ B — A is split along i, B broadcast, C gathered.
 paper's ``MPI_Cart_create``).  Rank (r, c) owns A[i-block r, k-block c]; B's
 k-panels live k-block-per-grid-column with their j-blocks spread down the
 rows.  Each of R ring steps multiplies the local A tile against the current
-B panel and the panels rotate along the *rows* sub-communicator with the new
-layout-agnostic p2p ring shift (``repro.core.ring_shift``); the epilogue is a
-``reduce_scatter_bag`` along the *cols* sub-communicator that sums the
-partial C panels over k and scatters j — with the final C tile layout chosen
-freely, the transform fused into the transfer.
+B panel and the panels rotate along the *rows* sub-communicator with the
+layout-agnostic p2p ring shift; the epilogue is a ``reduce_scatter_bag``
+along the *cols* sub-communicator that sums the partial C panels over k and
+scatters j — with the final C tile layout chosen freely, the transform fused
+into the transfer.
+
+The SUMMA ring is *double-buffered* by default: step ``s`` issues the panel
+rotation with the non-blocking ``ring_shift_start`` (MPI_Isend/Irecv
+analogue) *before* the local multiply and completes it with
+``PendingTile.wait`` after, so the transfer has no data dependence on the
+step's GEMM and the XLA scheduler overlaps the two.  The whole ring phase +
+epilogue is built as ONE traced program (``summa_ring_program``) so the
+overlap is *statically provable* from the compiled HLO:
+``repro.launch.hlo_walk.analyze`` classifies every ``collective-permute`` as
+overlapped or serialized from its def-use chains.  ``double_buffer=False``
+keeps the blocking formulation (compute, then shift) — numerically
+bit-identical, used as the reference.  The local multiply accumulates into a
+rotating j-block of the partial panel via the buffer-rotation GEMM kernel
+(``repro.kernels.ops.gemm_panel``).
 
 In both, the *global* matrices and the *per-rank tiles* choose their physical
 layouts independently (row-major or column-major per the C/A/B "majors"
@@ -31,6 +45,7 @@ if "XLA_FLAGS" not in os.environ:
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
 import argparse
+import functools
 import sys
 import time
 
@@ -41,9 +56,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
+    DistBag,
     bag,
     broadcast,
     dist_full,
+    dist_sharding,
     gather,
     make_mesh,
     mpi_cart_traverser,
@@ -51,6 +68,7 @@ from repro.core import (
     rank_map,
     reduce_scatter_bag,
     ring_shift,
+    ring_shift_start,
     scatter,
     traverser,
 )
@@ -126,8 +144,129 @@ def run_distributed_gemm(*, ni: int, nj: int, nk: int, majors: str = "I/I/K", ra
     return C_result, C_oracle
 
 
+def comm_volume_model(algo: str, *, ni: int, nj: int, nk: int,
+                      grid: tuple[int, int] | None = None, ranks: int | None = None,
+                      dtype_bytes: int = 4) -> dict:
+    """Analytic per-rank communication volume (bytes) of the two algorithms.
+
+    The headline asymptotics the benchmark tables report: the 1-D row-panel
+    algorithm replicates B to every rank — O(n^2) per rank regardless of P —
+    while the 2-D SUMMA ring moves only the (nk/Cc, nj/R) panel per step,
+    O(n^2/sqrt(P)) on a square grid.  ``ring_bytes`` is exact and matches the
+    ``collective-permute`` bytes the HLO walker counts in the dry-run trace;
+    the reduce-scatter/broadcast terms follow the conventions of
+    ``repro.launch.roofline`` (result bytes x1).
+    """
+    if algo == "summa2d":
+        if grid is None:
+            raise ValueError("summa2d model needs grid=(rows, cols)")
+        R, Cc = grid
+        ring = (R - 1) * (nk // Cc) * (nj // R) * dtype_bytes
+        reduce_scatter = (ni // R) * (nj // Cc) * dtype_bytes
+        return {"algo": algo, "ring_bytes": ring,
+                "reduce_scatter_bytes": reduce_scatter,
+                "total_bytes": ring + reduce_scatter}
+    if algo == "panel1d":
+        if ranks is None:
+            raise ValueError("panel1d model needs ranks")
+        bcast_b = nk * nj * dtype_bytes  # B replicated to every rank: O(n^2)
+        scatter_b = (ni // ranks) * nk * dtype_bytes
+        gather_b = (ni // ranks) * nj * dtype_bytes
+        return {"algo": algo, "broadcast_bytes": bcast_b, "scatter_bytes": scatter_b,
+                "gather_bytes": gather_b, "total_bytes": bcast_b + scatter_b + gather_b}
+    raise ValueError(f"unknown algo {algo!r}")
+
+
+@functools.lru_cache(maxsize=64)  # reuse the jitted program across calls
+def summa_ring_program(*, ni: int, nj: int, nk: int, grid: tuple[int, int] = (2, 4),
+                       majors: str = "I/I/K", mesh=None, double_buffer: bool = True):
+    """Build the SUMMA ring phase + reduce-scatter epilogue as ONE traced
+    program, so the comm/compute structure is inspectable in the compiled HLO.
+
+    Returns ``(fn, meta)``: ``fn`` is a jitted function taking the stacked
+    per-rank A tiles and B panels (``DistBag.data``) and returning the
+    stacked C tiles; ``meta`` carries the mesh, traversers, tile layouts,
+    abstract arguments for dry-run lowering, and the analytic comm model.
+
+    With ``double_buffer=True`` each step issues the panel rotation with the
+    non-blocking ``ring_shift_start`` *before* the local GEMM and waits after
+    it — the transfer is off the def-use chain between consecutive GEMMs, so
+    ``hlo_walk.analyze`` classifies every ring ``collective-permute`` as
+    overlapped.  With ``double_buffer=False`` the blocking formulation is
+    kept (GEMM, then ``ring_shift``) — numerically bit-identical.
+    """
+    c_major, a_major, b_major = majors.upper().split("/")
+    R, Cc = grid
+    if mesh is None:
+        mesh = make_mesh((R, Cc), ("rows", "cols"))
+    assert ni % R == 0 and nk % Cc == 0 and nj % R == 0 and nj % Cc == 0, (ni, nj, nk, grid)
+    mi, kc, jr, jc = ni // R, nk // Cc, nj // R, nj // Cc
+
+    # --- global layouts + communicator grid (paper's MPI_Cart_create) --------
+    A_layout = _mat_layout("i", "k", ni, nk, "i" if a_major == "I" else "k")
+    B_layout = _mat_layout("k", "j", nk, nj, "k" if b_major == "K" else "j")
+    A_root_l = A_layout ^ into_blocks("i", "Ri", num_blocks=R) ^ into_blocks("k", "Ck", num_blocks=Cc)
+    B_root_l = B_layout ^ into_blocks("k", "Ck", num_blocks=Cc) ^ into_blocks("j", "Rj", num_blocks=R)
+    dtA = mpi_cart_traverser([("Ri", "rows"), ("Ck", "cols")], traverser(A_root_l), mesh)
+    dtB = mpi_cart_traverser([("Rj", "rows"), ("Ck", "cols")], traverser(B_root_l), mesh)
+
+    # --- per-rank tile layouts, chosen independently of the global ones ------
+    A_tile = _mat_layout("i", "k", mi, kc, "i" if a_major == "I" else "k")
+    B_tile = _mat_layout("k", "j", kc, jr, "k" if b_major == "K" else "j")
+    C_tile = _mat_layout("i", "j", mi, jc, "i" if c_major == "I" else "j")
+    P_l = _mat_layout("i", "j", mi, nj, "i")  # partial panel, i-major internal
+
+    local_majors = f"I/{a_major}/{b_major}"
+
+    def ring_phase(a_data, b_data):
+        A_dist = DistBag(a_data, A_tile, dtA, ("Ri", "Ck"))
+        B_cur = DistBag(b_data, B_tile, dtB, ("Rj", "Ck"))
+        P = dist_full(dtA, P_l)
+        for s in range(R):
+            pend = None
+            if double_buffer and s < R - 1:
+                # MPI_Isend/Irecv analogue: issue step s's rotation before the
+                # local multiply so the transfer overlaps the compute
+                pend = ring_shift_start(B_cur, -1, rank_dim="Rj")
+
+            def step(state, p, a, b_panel, _s=s):
+                # per-rank layout-parametric GEMM (paper's kernel, Pallas on
+                # TPU) accumulating into the rotating j-block of the panel
+                jb = (state["Ri"] + _s) % R
+                new = ops.gemm_panel(a.data, b_panel.data, p.data, jb, majors=local_majors)
+                return p.with_data(new)
+
+            P = rank_map(step, dtA, P, A_dist, B_cur, out_tile_layout=P_l)
+            if s < R - 1:  # rotate B panels one hop up the rows ring (p2p §4.3)
+                if double_buffer:
+                    B_cur = pend.wait()  # MPI_Wait: completion point
+                else:
+                    B_cur = ring_shift(B_cur, -1, rank_dim="Rj")
+        # epilogue: sum partials over k (grid cols) and scatter j, landing
+        # each rank's C tile directly in its chosen layout
+        C_grid = reduce_scatter_bag(P, C_tile, scatter_dim="j", rank_dim="Ck")
+        return C_grid.data
+
+    shA = dist_sharding(dtA, A_tile)
+    shB = dist_sharding(dtB, B_tile)
+    fn = jax.jit(ring_phase, in_shardings=(shA, shB))
+    meta = dict(
+        mesh=mesh, dtA=dtA, dtB=dtB, grid=grid, steps=R,
+        A_layout=A_layout, B_layout=B_layout,
+        A_root_l=A_root_l, B_root_l=B_root_l,
+        A_tile=A_tile, B_tile=B_tile, C_tile=C_tile, panel_layout=P_l,
+        abstract_args=(
+            jax.ShapeDtypeStruct((R, Cc) + A_tile.shape, A_tile.dtype),
+            jax.ShapeDtypeStruct((R, Cc) + B_tile.shape, B_tile.dtype),
+        ),
+        comm_model=comm_volume_model("summa2d", ni=ni, nj=nj, nk=nk, grid=grid),
+    )
+    return fn, meta
+
+
 def run_summa_gemm(*, ni: int, nj: int, nk: int, grid: tuple[int, int] = (2, 4),
-                   majors: str = "I/I/K", mesh=None, verbose: bool = False):
+                   majors: str = "I/I/K", mesh=None, verbose: bool = False,
+                   double_buffer: bool = True):
     """2-D-grid SUMMA C = A @ B; returns (C_result, C_oracle) as (ni, nj).
 
     Placement on the (rows=R, cols=Cc) grid:
@@ -137,65 +276,33 @@ def run_summa_gemm(*, ni: int, nj: int, nk: int, grid: tuple[int, int] = (2, 4),
 
     Ring phase: at step s rank (r, c) holds B[k-block c, j-block (r+s) % R]
     and fills j-block (r+s) % R of its partial panel P = A[r,c] @ B[k c, :];
-    the B panels then ring-shift one hop along the *rows* sub-communicator.
-    Epilogue: summing P over the grid columns (= over k-blocks) and
-    scattering j is exactly one layout-agnostic ``reduce_scatter_bag`` along
-    the *cols* sub-communicator.
+    the B panels ring-shift one hop along the *rows* sub-communicator —
+    non-blocking and overlapped with the multiply when ``double_buffer``
+    (the default), blocking otherwise.  See :func:`summa_ring_program`.
     """
-    c_major, a_major, b_major = majors.upper().split("/")
     R, Cc = grid
-    if mesh is None:
-        mesh = make_mesh((R, Cc), ("rows", "cols"))
-    assert ni % R == 0 and nk % Cc == 0 and nj % R == 0 and nj % Cc == 0, (ni, nj, nk, grid)
-    mi, kc, jr, jc = ni // R, nk // Cc, nj // R, nj // Cc
+    fn, meta = summa_ring_program(ni=ni, nj=nj, nk=nk, grid=grid, majors=majors,
+                                  mesh=mesh, double_buffer=double_buffer)
+    dtA, dtB = meta["dtA"], meta["dtB"]
+    A_tile, B_tile, C_tile = meta["A_tile"], meta["B_tile"], meta["C_tile"]
+    mi, jc = ni // R, nj // Cc
 
     rng = np.random.default_rng(11)
     A_np = rng.standard_normal((ni, nk)).astype(np.float32)
     B_np = rng.standard_normal((nk, nj)).astype(np.float32)
 
-    # --- global bags, laid out per the config --------------------------------
-    A_layout = _mat_layout("i", "k", ni, nk, "i" if a_major == "I" else "k")
-    B_layout = _mat_layout("k", "j", nk, nj, "k" if b_major == "K" else "j")
+    # --- global bags, laid out per the config (layouts from the program) -----
+    A_layout, B_layout = meta["A_layout"], meta["B_layout"]
     A_glob = bag(A_layout, A_np if A_layout.axis_names == ("i", "k") else A_np.T)
     B_glob = bag(B_layout, B_np if B_layout.axis_names == ("k", "j") else B_np.T)
-
-    # --- communicator grid (paper's MPI_Cart_create) -------------------------
-    A_root_l = A_layout ^ into_blocks("i", "Ri", num_blocks=R) ^ into_blocks("k", "Ck", num_blocks=Cc)
-    B_root_l = B_layout ^ into_blocks("k", "Ck", num_blocks=Cc) ^ into_blocks("j", "Rj", num_blocks=R)
-    A_root = bag(A_root_l, A_glob.data)
-    B_root = bag(B_root_l, B_glob.data)
-    dtA = mpi_cart_traverser([("Ri", "rows"), ("Ck", "cols")], traverser(A_root), mesh)
-    dtB = mpi_cart_traverser([("Rj", "rows"), ("Ck", "cols")], traverser(B_root), mesh)
-
-    # --- per-rank tile layouts, chosen independently of the global ones ------
-    A_tile = _mat_layout("i", "k", mi, kc, "i" if a_major == "I" else "k")
-    B_tile = _mat_layout("k", "j", kc, jr, "k" if b_major == "K" else "j")
-    C_tile = _mat_layout("i", "j", mi, jc, "i" if c_major == "I" else "j")
-    P_l = _mat_layout("i", "j", mi, nj, "i")  # partial panel, i-major internal
+    A_root = bag(meta["A_root_l"], A_glob.data)
+    B_root = bag(meta["B_root_l"], B_glob.data)
 
     t0 = time.perf_counter()
     A_dist = scatter(A_root, A_tile, dtA)  # layout transform rides the scatter
     B_cur = scatter(B_root, B_tile, dtB)
-    P = dist_full(dtA, P_l)
-
-    local_majors = f"I/{a_major}/{b_major}"
-    for s in range(R):
-        def step(state, p, a, b_panel, _s=s):
-            # per-rank layout-parametric GEMM (paper's kernel, Pallas on TPU);
-            # the SUMMA inner step accumulates into the partial C panel block
-            jb = (state["Ri"] + _s) % R
-            cur = jax.lax.dynamic_slice(p.data, (0, jb * jr), (mi, jr))
-            block = ops.gemm(a.data, b_panel.data, cur, majors=local_majors)
-            new = jax.lax.dynamic_update_slice(p.data, block, (0, jb * jr))
-            return p.with_data(new)
-
-        P = rank_map(step, dtA, P, A_dist, B_cur, out_tile_layout=P_l)
-        if s < R - 1:  # rotate B panels one hop up the rows ring (p2p §4.3)
-            B_cur = ring_shift(B_cur, -1, rank_dim="Rj")
-
-    # epilogue: sum partials over k (grid cols) and scatter j, landing each
-    # rank's C tile directly in its chosen layout
-    C_grid = reduce_scatter_bag(P, C_tile, scatter_dim="j", rank_dim="Ck")
+    C_data = fn(A_dist.data, B_cur.data)  # the whole ring + epilogue, one program
+    C_grid = DistBag(C_data, C_tile, dtA, ("Ri", "Ck"))
     C_grid.data.block_until_ready()
     elapsed = time.perf_counter() - t0
 
@@ -209,7 +316,8 @@ def run_summa_gemm(*, ni: int, nj: int, nk: int, grid: tuple[int, int] = (2, 4),
     C_oracle = A_np @ B_np
     if verbose:
         err = np.abs(C_result - C_oracle).max()
-        print(f"SUMMA majors={majors} grid={grid} ni,nj,nk=({ni},{nj},{nk}) "
+        variant = "double-buffered" if double_buffer else "blocking"
+        print(f"SUMMA[{variant}] majors={majors} grid={grid} ni,nj,nk=({ni},{nj},{nk}) "
               f"time={elapsed*1e3:.2f}ms max_err={err:.2e}")
     return C_result, C_oracle
 
@@ -223,6 +331,8 @@ def main():
     ap.add_argument("--ranks", type=int, default=None)
     ap.add_argument("--summa", action="store_true", help="2-D-grid SUMMA instead of 1-D")
     ap.add_argument("--grid", default="2x4", help="SUMMA grid rows x cols")
+    ap.add_argument("--blocking", action="store_true",
+                    help="SUMMA: blocking ring shifts instead of the double-buffered default")
     args = ap.parse_args()
 
     ni, nj, nk = DATASETS[args.dataset]
@@ -230,7 +340,8 @@ def main():
     for majors in configs:
         if args.summa:
             grid = tuple(int(x) for x in args.grid.split("x"))
-            C, ref = run_summa_gemm(ni=ni, nj=nj, nk=nk, majors=majors, grid=grid, verbose=True)
+            C, ref = run_summa_gemm(ni=ni, nj=nj, nk=nk, majors=majors, grid=grid,
+                                    double_buffer=not args.blocking, verbose=True)
         else:
             C, ref = run_distributed_gemm(ni=ni, nj=nj, nk=nk, majors=majors, ranks=args.ranks, verbose=True)
         np.testing.assert_allclose(C, ref, rtol=1e-3, atol=1e-3)

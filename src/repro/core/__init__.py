@@ -73,9 +73,18 @@ from .collectives import (
     reduce_scatter_bag,
     all_to_all_bag,
     dist_full,
+    dist_sharding,
     rank_map,
 )
-from .p2p import send_recv, permute, ring_shift
+from .p2p import (
+    PendingTile,
+    permute,
+    permute_start,
+    ring_shift,
+    ring_shift_start,
+    send_recv,
+    wait,
+)
 
 __all__ = [
     "LayoutError",
@@ -122,9 +131,14 @@ __all__ = [
     "reduce_scatter_bag",
     "all_to_all_bag",
     "dist_full",
+    "dist_sharding",
     "rank_map",
     "DistBag",
     "send_recv",
     "permute",
     "ring_shift",
+    "PendingTile",
+    "permute_start",
+    "ring_shift_start",
+    "wait",
 ]

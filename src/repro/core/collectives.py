@@ -45,6 +45,7 @@ __all__ = [
     "reduce_scatter_bag",
     "all_to_all_bag",
     "dist_full",
+    "dist_sharding",
     "rank_map",
 ]
 
@@ -252,6 +253,18 @@ def broadcast(b: Bag, dt: DistTraverser, dst_layout: Layout | None = None) -> Ba
 def all_gather_bag(dist: DistBag, root_layout: Layout) -> Bag:
     """Every rank ends with the full structure in ``root_layout``."""
     return gather(dist, root_layout)  # single-controller: gather is replicated
+
+
+def dist_sharding(
+    dt: DistTraverser,
+    tile_layout: Layout,
+    rank_dim: str | Sequence[str] | None = None,
+) -> NamedSharding:
+    """The NamedSharding of a DistBag's stacked global array — for building
+    jit'able programs over ``DistBag.data`` (``in_shardings`` of a traced
+    SUMMA ring, dry-run lowering from ShapeDtypeStructs, ...)."""
+    rank_dims = _as_rank_dims(dt, rank_dim)
+    return NamedSharding(dt.mesh, _grid_spec(dt, rank_dims, tile_layout.ndim))
 
 
 def dist_full(

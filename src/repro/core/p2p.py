@@ -12,9 +12,43 @@ communicator; the other grid dims act as independent sub-communicators.  The
 ranking dim must bind to a single mesh axis (ppermute is per-axis); bind a
 merged rank dim through :func:`repro.core.dist.mpi_cart_traverser` and pick
 one of its dims instead.
+
+Non-blocking transfers
+----------------------
+Real MPI GEMMs hide the ring exchange behind the local multiply with
+``MPI_Isend``/``MPI_Irecv``; the analogue here is the ``*_start`` family,
+which *issues* the relayout-fused transfer and hands back a
+:class:`PendingTile` — the request-object analogue — whose :meth:`~
+PendingTile.wait` marks the completion point with
+``jax.lax.optimization_barrier``.  Correspondence table:
+
+=========================  ====================================================
+MPI                        repro.core.p2p
+=========================  ====================================================
+``MPI_Send``/``MPI_Recv``  :func:`send_recv` (one matched blocking pair)
+``MPI_Sendrecv`` ring      :func:`ring_shift` / :func:`permute`
+``MPI_Isend``/``Irecv``    :func:`ring_shift_start` / :func:`permute_start`
+``MPI_Request``            :class:`PendingTile`
+``MPI_Wait``               :meth:`PendingTile.wait`
+``MPI_Waitall``            :func:`wait` over several pending tiles
+=========================  ====================================================
+
+Semantics in the XLA world: a started transfer is a value with *no data
+dependence on any compute issued between start and wait*, so the scheduler is
+free to run the ``collective-permute`` concurrently with the local GEMM —
+exactly the comm/compute overlap of a double-buffered SUMMA.  The
+``optimization_barrier`` at the wait point keeps the in-flight buffer an
+independent chain during XLA's optimization passes (it is erased after
+optimization, leaving pure dataflow).  Whether the overlap actually holds in
+the compiled program is *provable statically*: :func:`repro.launch.hlo_walk.
+analyze` classifies every ``collective-permute`` in the optimized HLO as
+``overlapped`` (off the def-use chain between compute ops) or ``serialized``
+(a compute op feeds the transfer *and* the transfer feeds a later compute op
+— e.g. shipping a GEMM's output to the next rank of a pipeline).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Iterable, Sequence
 
 import jax
@@ -25,7 +59,15 @@ from .layout import Layout
 from .relayout import relayout
 from .collectives import DistBag, _shard_collective
 
-__all__ = ["send_recv", "permute", "ring_shift"]
+__all__ = [
+    "send_recv",
+    "permute",
+    "ring_shift",
+    "PendingTile",
+    "permute_start",
+    "ring_shift_start",
+    "wait",
+]
 
 
 def _single_axis(dist: DistBag, rank_dim: str | None) -> tuple[str, str, int]:
@@ -61,6 +103,25 @@ def _dst_layout(dist: DistBag, dst_tile_layout: Layout | None) -> Layout:
     return dst
 
 
+def _issue_permute(
+    dist: DistBag,
+    perm: Iterable[tuple[int, int]],
+    rank_dim: str | None,
+    dst_tile_layout: Layout | None,
+) -> DistBag:
+    """Issue the relayout-fused ppermute along ``rank_dim`` (shared by the
+    blocking and non-blocking entry points)."""
+    rank_dim, axis, R = _single_axis(dist, rank_dim)
+    pairs = _check_perm(list(perm), R)
+    dst = _dst_layout(dist, dst_tile_layout)
+
+    def tile_fn(t):
+        r = relayout(t, dist.tile_layout, dst)
+        return jax.lax.ppermute(r, axis, pairs)
+
+    return _shard_collective(dist, dst, tile_fn)
+
+
 def permute(
     dist: DistBag,
     perm: Iterable[tuple[int, int]],
@@ -75,15 +136,7 @@ def permute(
     that no pair sends to receive a zero tile — the analogue of posting no
     matching ``MPI_Recv``.
     """
-    rank_dim, axis, R = _single_axis(dist, rank_dim)
-    pairs = _check_perm(list(perm), R)
-    dst = _dst_layout(dist, dst_tile_layout)
-
-    def tile_fn(t):
-        r = relayout(t, dist.tile_layout, dst)
-        return jax.lax.ppermute(r, axis, pairs)
-
-    return _shard_collective(dist, dst, tile_fn)
+    return _issue_permute(dist, perm, rank_dim, dst_tile_layout)
 
 
 def ring_shift(
@@ -101,6 +154,69 @@ def ring_shift(
     return permute(dist, pairs, rank_dim=rank_dim, dst_tile_layout=dst_tile_layout)
 
 
+# -----------------------------------------------------------------------------
+# non-blocking transfers (MPI_Isend / MPI_Irecv / MPI_Wait analogue)
+# -----------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PendingTile:
+    """An in-flight transfer: the request-object analogue of ``MPI_Request``.
+
+    Holds the already-issued ``DistBag`` whose ``collective-permute`` carries
+    no data dependence on compute issued after the start — the scheduler may
+    overlap it freely.  :meth:`wait` is the completion point.
+    """
+
+    dist: DistBag
+    op: str = "permute"
+
+    def wait(self) -> DistBag:
+        """Complete the transfer (``MPI_Wait``): pins the received buffer
+        behind an ``optimization_barrier`` so the in-flight value stays an
+        independent chain through XLA's optimization passes, then hands back
+        the received tiles as a normal :class:`DistBag`."""
+        return self.dist.with_data(jax.lax.optimization_barrier(self.dist.data))
+
+
+def permute_start(
+    dist: DistBag,
+    perm: Iterable[tuple[int, int]],
+    *,
+    rank_dim: str | None = None,
+    dst_tile_layout: Layout | None = None,
+) -> PendingTile:
+    """Non-blocking :func:`permute`: issue the relayout-fused transfer and
+    return a :class:`PendingTile` immediately (``MPI_Isend``/``MPI_Irecv``)."""
+    return PendingTile(_issue_permute(dist, perm, rank_dim, dst_tile_layout), op="permute")
+
+
+def ring_shift_start(
+    dist: DistBag,
+    shift: int = 1,
+    *,
+    rank_dim: str | None = None,
+    dst_tile_layout: Layout | None = None,
+) -> PendingTile:
+    """Non-blocking :func:`ring_shift`: the double-buffered SUMMA issues this
+    *before* the local GEMM of the step and waits after, so step ``k``'s panel
+    rotation overlaps step ``k``'s multiply."""
+    return PendingTile(
+        ring_shift(dist, shift, rank_dim=rank_dim, dst_tile_layout=dst_tile_layout),
+        op="ring_shift",
+    )
+
+
+def wait(*pending: PendingTile):
+    """Complete one or more pending transfers (``MPI_Wait`` / ``MPI_Waitall``).
+
+    Returns the received :class:`DistBag` for a single request, a tuple of
+    them for several.
+    """
+    if not pending:
+        raise LayoutError("wait() needs at least one PendingTile")
+    done = tuple(p.wait() for p in pending)
+    return done[0] if len(done) == 1 else done
+
+
 def send_recv(
     dist: DistBag,
     *,
@@ -112,18 +228,25 @@ def send_recv(
     """One matched send/recv pair along ``rank_dim``: rank ``dst`` receives
     rank ``src``'s tile, every other rank keeps its own.
 
-    All tiles of the result are in ``dst_tile_layout`` (the receiver's
-    declared layout); the source tile's transform — and the bystanders' —
-    ride inside the same XLA program as the ``ppermute`` transfer.
+    ``dst_tile_layout`` is the receiver's declared datatype: it is the *wire*
+    layout of the transfer, and the pack (``src`` layout -> wire) and unpack
+    (wire -> receiver's buffer) transforms ride inside the same XLA program
+    as the ``ppermute``.  Ranks other than ``dst`` posted no matching
+    ``MPI_Recv``, so their tiles pass through *untouched* — bit-identical, in
+    the source layout.  Because a :class:`DistBag` holds one homogeneous tile
+    layout, the result stays in the source tile layout for every rank
+    (including the receiver's slot, unpacked into it); use
+    ``out.tile(dst).to_layout(...)`` for a different host-side view.
     """
     rank_dim, axis, R = _single_axis(dist, rank_dim)
     _check_perm([(src, dst)], R)
-    dst_l = _dst_layout(dist, dst_tile_layout)
+    wire_l = _dst_layout(dist, dst_tile_layout)
 
     def tile_fn(t):
-        r = relayout(t, dist.tile_layout, dst_l)
-        recv = jax.lax.ppermute(r, axis, [(src, dst)])
+        packed = relayout(t, dist.tile_layout, wire_l)  # MPI datatype, send side
+        recv = jax.lax.ppermute(packed, axis, [(src, dst)])
+        unpacked = relayout(recv, wire_l, dist.tile_layout)  # receive side
         me = jax.lax.axis_index(axis)
-        return jnp.where(me == dst, recv, r)
+        return jnp.where(me == dst, unpacked, t)  # bystanders: untouched
 
-    return _shard_collective(dist, dst_l, tile_fn)
+    return _shard_collective(dist, dist.tile_layout, tile_fn)

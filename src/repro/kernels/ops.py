@@ -14,11 +14,11 @@ from __future__ import annotations
 import jax
 
 from . import ref as _ref
-from .gemm import gemm_pallas
+from .gemm import gemm_pallas, gemm_panel_pallas
 from .flash_attention import flash_attention_pallas
 from .relayout import transpose_tiled_pallas
 
-__all__ = ["default_impl", "gemm", "flash_attention", "transpose_tiled"]
+__all__ = ["default_impl", "gemm", "gemm_panel", "flash_attention", "transpose_tiled"]
 
 
 def default_impl() -> str:
@@ -34,6 +34,14 @@ def gemm(a, b, acc=None, *, majors: str = "I/I/K", impl: str | None = None, **kw
     if impl == "ref":
         return _ref.gemm_ref(a, b, acc, majors=majors, out_dtype=kw.get("out_dtype"))
     return gemm_pallas(a, b, acc, majors=majors, interpret=(impl == "interpret"), **kw)
+
+
+def gemm_panel(a, b, panel, jb, *, majors: str = "I/I/K", impl: str | None = None, **kw):
+    """Rotating-accumulator SUMMA inner step: panel[j-block jb] += A @ B."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.gemm_panel_ref(a, b, panel, jb, majors=majors)
+    return gemm_panel_pallas(a, b, panel, jb, majors=majors, interpret=(impl == "interpret"), **kw)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, impl: str | None = None, mixed: bool | None = None, **kw):

@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["gemm_ref", "attention_ref", "transpose_ref", "blockwise_attention_ref"]
+__all__ = ["gemm_ref", "gemm_panel_ref", "attention_ref", "transpose_ref", "blockwise_attention_ref"]
 
 
 def gemm_ref(a, b, acc=None, *, majors: str = "I/I/K", out_dtype=None):
@@ -27,6 +27,28 @@ def gemm_ref(a, b, acc=None, *, majors: str = "I/I/K", out_dtype=None):
     if acc is not None:
         c = c + acc.astype(jnp.float32)
     return c.astype(out_dtype or a.dtype)
+
+
+def gemm_panel_ref(a, b, panel, jb, *, majors: str = "I/I/K"):
+    """Reference for :func:`repro.kernels.gemm.gemm_panel_pallas`: accumulate
+    A @ B into j-block ``jb`` of the partial panel (``jb`` may be traced),
+    leaving the other blocks untouched."""
+    c_major, a_major, b_major = majors.upper().split("/")
+    al = a.T if a_major == "K" else a  # -> logical (i, k)
+    bl = b.T if b_major == "J" else b  # -> logical (k, j)
+    N = bl.shape[1]
+    jb = jnp.asarray(jb, jnp.int32)
+    c = jnp.dot(
+        al.astype(jnp.float32), bl.astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+    if c_major == "J":
+        start = (jb * N, jnp.zeros_like(jb))
+        c = c.T
+    else:
+        start = (jnp.zeros_like(jb), jb * N)
+    cur = jax.lax.dynamic_slice(panel, start, c.shape)
+    blk = (c + cur.astype(jnp.float32)).astype(panel.dtype)
+    return jax.lax.dynamic_update_slice(panel, blk, start)
 
 
 def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):

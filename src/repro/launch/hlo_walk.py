@@ -15,7 +15,21 @@ op costs by the product of enclosing trip counts.  It produces:
   * ``collective_bytes`` — per-kind bytes for all-gather / all-reduce /
                            reduce-scatter / all-to-all / collective-permute,
                            loop-multiplied (factors: all-reduce x2 for the
-                           reduce+broadcast phases, others x1).
+                           reduce+broadcast phases, others x1);
+  * ``permutes``         — an overlap classification of every
+                           ``collective-permute``: *overlapped* when the
+                           transfer is off the def-use chain between compute
+                           ops, *serialized* when a compute op (``dot``, a
+                           fusion containing one, a kernel custom-call) feeds
+                           the transfer AND the transfer feeds a later
+                           compute op — i.e. the transfer sits on the
+                           critical path between consecutive GEMMs (inside a
+                           ``while`` body the loop-carried root->parameter
+                           edges count, so a transfer feeding next
+                           iteration's dot is on the chain).  This is the
+                           static proof of comm/compute overlap for the
+                           double-buffered SUMMA ring: a transfer the
+                           scheduler *can* hide has no compute upstream.
 
 Everything is static text analysis of the compiled artifact — the "profile"
 available without hardware (see EXPERIMENTS.md §Roofline).
@@ -26,7 +40,7 @@ import dataclasses
 import re
 from typing import Iterable
 
-__all__ = ["HloStats", "analyze", "top_contributors"]
+__all__ = ["HloStats", "PermuteClass", "analyze", "classify_permutes", "top_contributors"]
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -43,9 +57,23 @@ _CONST_RE = re.compile(r"constant\((\d+)\)")
 
 _NO_TRAFFIC = {
     "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
-    "after-all", "partition-id", "replica-id", "iota",
+    "after-all", "partition-id", "replica-id", "iota", "opt-barrier",
 }
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+# custom-call targets that are SPMD bookkeeping, not compute
+_PARTITION_CUSTOM_CALLS = {
+    "Sharding", "SPMDFullToShardShape", "SPMDShardToFullShape", "AllocateBuffer",
+}
+# per-attribute callee extraction: unlike _CALL_ATTR_RE (first match only,
+# which on `condition=%c, body=%b` swallows the literal `body` into the first
+# capture), this matches every attr=value pair on the line
+_EACH_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|branch_computations)=(\{[^}]*\}|%[\w\.\-]+)"
+)
+_CUSTOM_TARGET_RE = re.compile(r'custom_call_target="([^"]*)"')
+_GTE_INDEX_RE = re.compile(r"index=(\d+)")
+_REF_RE = re.compile(r"%[\w\.\-]+")
 
 
 def _tensor_bytes(shape_text: str) -> int:
@@ -183,6 +211,144 @@ def _fusion_traffic(line: str, result_shape: str, comp: _Computation, comps: dic
 
 
 @dataclasses.dataclass
+class PermuteClass:
+    """One ``collective-permute``'s overlap verdict (see module docstring)."""
+
+    computation: str
+    var: str
+    bytes: int
+    mult: float
+    classification: str  # 'overlapped' | 'serialized'
+
+
+class _OverlapAnalyzer:
+    """Def-use dependency-chain analysis over the parsed computations.
+
+    A node is *compute* if it is a ``dot``, a fusion/call/while/conditional
+    whose callee (transitively) contains a dot, or a kernel custom-call.  A
+    collective-permute is *serialized* iff some compute node reaches it AND
+    it reaches some compute node — it sits on the def-use chain between
+    compute ops; otherwise *overlapped* (the scheduler may hide it).  While
+    bodies get loop-carried edges (ROOT tuple element k -> the parameter
+    get-tuple-element with index k) so cross-iteration chains count.
+    """
+
+    def __init__(self, comps: dict):
+        self.comps = comps
+        self._graphs: dict[str, tuple[dict, dict]] = {}
+        self._ops_by_var: dict[str, dict] = {}
+        self._contains_dot: dict[str, bool] = {}
+        self._while_bodies = {
+            wm.group(2)
+            for comp in comps.values()
+            for _, _, op, line in comp.lines
+            if op == "while"
+            for wm in [_WHILE_RE.search(line)]
+            if wm
+        }
+
+    # -- compute predicate -------------------------------------------------------
+    def _callees(self, line: str) -> list[str]:
+        out = []
+        for m in _EACH_CALL_ATTR_RE.finditer(line):
+            val = m.group(1).strip("{}")
+            out += [c.strip() for c in val.split(",") if c.strip() in self.comps]
+        return out
+
+    def contains_dot(self, name: str) -> bool:
+        if name in self._contains_dot:
+            return self._contains_dot[name]
+        self._contains_dot[name] = False  # cycle guard
+        comp = self.comps.get(name)
+        found = False
+        if comp is not None:
+            for _, _, op, line in comp.lines:
+                if self.is_compute(op, line):
+                    found = True
+                    break
+        self._contains_dot[name] = found
+        return found
+
+    def is_compute(self, op: str, line: str) -> bool:
+        if op == "dot":
+            return True
+        if op == "custom-call":
+            tm = _CUSTOM_TARGET_RE.search(line)
+            return tm is None or tm.group(1) not in _PARTITION_CUSTOM_CALLS
+        if op in ("fusion", "call", "while", "conditional"):
+            return any(self.contains_dot(c) for c in self._callees(line))
+        return False
+
+    # -- def-use graph -----------------------------------------------------------
+    def _graph(self, comp: _Computation) -> tuple[dict, dict]:
+        if comp.name in self._graphs:
+            return self._graphs[comp.name]
+        operands: dict[str, list[str]] = {}
+        users: dict[str, list[str]] = {}
+        for var, _, op, line in comp.lines:
+            rhs = line.split("=", 1)[1]
+            refs = [r for r in _REF_RE.findall(rhs) if r in comp.defs and r != var]
+            operands[var] = refs
+            for r in refs:
+                users.setdefault(r, []).append(var)
+        if comp.name in self._while_bodies:
+            self._add_loop_carry(comp, operands, users)
+        self._graphs[comp.name] = (operands, users)
+        return operands, users
+
+    def _add_loop_carry(self, comp: _Computation, operands: dict, users: dict) -> None:
+        root = next(
+            (
+                (var, op, line)
+                for var, _, op, line in comp.lines
+                if line.strip().startswith("ROOT")
+            ),
+            None,
+        )
+        if root is None or root[1] != "tuple":
+            return
+        params = {var for var, _, op, _ in comp.lines if op == "parameter"}
+        gte_by_idx: dict[int, list[str]] = {}
+        for var, _, op, line in comp.lines:
+            if op != "get-tuple-element":
+                continue
+            rhs = line.split("=", 1)[1]
+            refs = _REF_RE.findall(rhs)
+            im = _GTE_INDEX_RE.search(line)
+            if refs and refs[0] in params and im:
+                gte_by_idx.setdefault(int(im.group(1)), []).append(var)
+        root_refs = [r for r in _REF_RE.findall(root[2].split("=", 1)[1]) if r in comp.defs]
+        for k, r in enumerate(root_refs):
+            for g in gte_by_idx.get(k, []):
+                operands.setdefault(g, []).append(r)
+                users.setdefault(r, []).append(g)
+
+    def _reaches_compute(self, comp: _Computation, start: str, edges: dict) -> bool:
+        ops_by_var = self._ops_by_var.get(comp.name)
+        if ops_by_var is None:
+            ops_by_var = {var: (op, line) for var, _, op, line in comp.lines}
+            self._ops_by_var[comp.name] = ops_by_var
+        seen = {start}
+        frontier = list(edges.get(start, []))
+        while frontier:
+            v = frontier.pop()
+            if v in seen:
+                continue
+            seen.add(v)
+            op, line = ops_by_var.get(v, ("", ""))
+            if self.is_compute(op, line):
+                return True
+            frontier.extend(edges.get(v, []))
+        return False
+
+    def classify(self, comp: _Computation, var: str) -> str:
+        operands, users = self._graph(comp)
+        upstream = self._reaches_compute(comp, var, operands)
+        downstream = self._reaches_compute(comp, var, users)
+        return "serialized" if (upstream and downstream) else "overlapped"
+
+
+@dataclasses.dataclass
 class HloStats:
     flops: float = 0.0
     bytes: float = 0.0
@@ -190,6 +356,26 @@ class HloStats:
     coll_by_op: dict = dataclasses.field(default_factory=dict)
     dot_flops_by_mult: dict = dataclasses.field(default_factory=dict)
     loop_trip_counts: list = dataclasses.field(default_factory=list)
+    permutes: list = dataclasses.field(default_factory=list)  # list[PermuteClass]
+
+    @property
+    def permutes_overlapped(self) -> int:
+        return sum(1 for p in self.permutes if p.classification == "overlapped")
+
+    @property
+    def permutes_serialized(self) -> int:
+        return sum(1 for p in self.permutes if p.classification == "serialized")
+
+    @property
+    def permute_overlap_fraction(self) -> float | None:
+        """Byte-weighted (loop-multiplied) fraction of collective-permute
+        traffic that is off the compute def-use chain; None if the program
+        has no collective-permutes."""
+        total = sum(p.bytes * p.mult for p in self.permutes)
+        if not total:
+            return None
+        good = sum(p.bytes * p.mult for p in self.permutes if p.classification == "overlapped")
+        return good / total
 
 
 def analyze(hlo_text: str) -> HloStats:
@@ -210,6 +396,7 @@ def analyze(hlo_text: str) -> HloStats:
                         fusion_bodies.add(callee.strip())
 
     stats = HloStats()
+    overlap = _OverlapAnalyzer(comps)
     visited: dict[str, float] = {}
 
     def walk(name: str, mult: float) -> None:
@@ -251,10 +438,15 @@ def analyze(hlo_text: str) -> HloStats:
             # ---- collectives ----
             for coll in _COLLECTIVES:
                 if op == coll or op == coll + "-done":
-                    cb = _tensor_bytes(shape if not op.endswith("-done") else shape)
+                    cb = _tensor_bytes(shape)
                     factor = 2 if coll == "all-reduce" else 1
                     stats.collective_bytes += mult * cb * factor
                     stats.coll_by_op[coll] = stats.coll_by_op.get(coll, 0.0) + mult * cb * factor
+                    if coll == "collective-permute":
+                        stats.permutes.append(PermuteClass(
+                            computation=name, var=var, bytes=cb, mult=mult,
+                            classification=overlap.classify(comp, var),
+                        ))
                     break
                 if op == coll + "-start":
                     break  # counted at -done
@@ -279,6 +471,24 @@ def analyze(hlo_text: str) -> HloStats:
 
     walk(entry, 1.0)
     return stats
+
+
+def classify_permutes(hlo_text: str) -> list[PermuteClass]:
+    """Standalone overlap classification of every ``collective-permute`` in
+    the module (all computations, no loop multipliers) — the quick check for
+    'did the double-buffered rewrite actually take the transfers off the
+    critical path?'."""
+    comps = _split_computations(hlo_text)
+    overlap = _OverlapAnalyzer(comps)
+    out: list[PermuteClass] = []
+    for comp in comps.values():
+        for var, shape, op, _ in comp.lines:
+            if op in ("collective-permute", "collective-permute-done"):
+                out.append(PermuteClass(
+                    computation=comp.name, var=var, bytes=_tensor_bytes(shape),
+                    mult=1.0, classification=overlap.classify(comp, var),
+                ))
+    return out
 
 
 def top_contributors(hlo_text: str, k: int = 15) -> dict:

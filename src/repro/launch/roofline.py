@@ -102,6 +102,11 @@ class RooflineResult:
     t_compute: float
     t_memory: float
     t_collective: float
+    # static comm/compute-overlap evidence (hlo_walk def-use classification):
+    # collective-permutes off the compute chain can be hidden by the scheduler
+    permutes_overlapped: int = 0
+    permutes_serialized: int = 0
+    permute_overlap_fraction: float | None = None
 
     @property
     def dominant(self) -> str:
@@ -161,4 +166,7 @@ def roofline_report(*, arch: str, shape: str, mesh_name: str, chips: int,
         t_compute=st.flops / HW["peak_flops"],
         t_memory=st.bytes / HW["hbm_bw"],
         t_collective=st.collective_bytes / HW["link_bw"],
+        permutes_overlapped=st.permutes_overlapped,
+        permutes_serialized=st.permutes_serialized,
+        permute_overlap_fraction=st.permute_overlap_fraction,
     )

@@ -53,6 +53,45 @@ def test_gemm_accumulate_input(majors):
     np.testing.assert_allclose(out, ref.gemm_ref(a, b, acc, majors=majors), rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("majors", ["I/I/K", "J/K/J", "I/K/J", "J/I/K"])
+def test_gemm_panel_rotation(majors):
+    """Buffer-rotation SUMMA step: accumulate A @ B into j-block jb of a
+    wider panel, preserving every other block (in-place aliased write),
+    with the rotation index a traced scalar."""
+    import jax
+
+    M, N, K, NB = 64, 16, 32, 4
+    a, b = _gemm_operands(M, N, K, majors, jnp.float32)
+    c_major = majors.split("/")[0]
+    panel_shape = (N * NB, M) if c_major == "J" else (M, N * NB)
+    panel = jnp.asarray(RNG.standard_normal(panel_shape), jnp.float32)
+    for jb in [0, 1, 3]:
+        want = ref.gemm_panel_ref(a, b, panel, jb, majors=majors)
+        got = ops.gemm_panel(a, b, panel, jb, majors=majors, impl="interpret",
+                             bm=32, bn=8, bk=16)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+        # untouched blocks are preserved bit for bit
+        got = np.asarray(got)
+        if c_major == "J":
+            mask = np.ones(panel_shape, bool); mask[jb * N:(jb + 1) * N, :] = False
+        else:
+            mask = np.ones(panel_shape, bool); mask[:, jb * N:(jb + 1) * N] = False
+        assert np.array_equal(got[mask], np.asarray(panel)[mask]), (majors, jb)
+    # traced rotation index (the per-rank SUMMA case)
+    f = jax.jit(lambda jb: ops.gemm_panel(a, b, panel, jb, majors=majors,
+                                          impl="interpret", bm=32, bn=8, bk=16))
+    np.testing.assert_allclose(
+        f(jnp.int32(2)), ref.gemm_panel_ref(a, b, panel, 2, majors=majors),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_gemm_panel_rejects_bad_panel():
+    a, b = _gemm_operands(32, 16, 32, "I/I/K", jnp.float32)
+    with pytest.raises(ValueError):
+        ops.gemm_panel(a, b, jnp.zeros((32, 17), jnp.float32), 0,
+                       majors="I/I/K", impl="interpret")
+
+
 def test_gemm_acc_shape_mismatch_rejected():
     a, b = _gemm_operands(32, 32, 32, "I/I/K", jnp.float32)
     with pytest.raises(ValueError):

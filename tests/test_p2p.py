@@ -3,8 +3,9 @@ with differing endpoint layouts, on 1-D communicators and 2-D grids."""
 
 
 def test_send_recv_differing_endpoint_layouts(distributed):
-    """Rank 2's col-major tile arrives at rank 5 in the receiver's row-major
-    layout; bystanders keep their own tiles (also relayouted)."""
+    """Rank 2's tile arrives at rank 5 with a row-major wire datatype (the
+    receiver's declared layout); the result bag stays homogeneous in the
+    source layout and every rank's tile is logically correct."""
     out = distributed(
         """
 import numpy as np, jax, jax.numpy as jnp
@@ -21,13 +22,82 @@ dst_tile = scalar(np.float32) ^ vector('j', M//8) ^ vector('i', N)   # row-major
 dt = mpi_traverser('R', traverser(root), mesh)
 db = scatter(root, src_tile, dt)
 out = send_recv(db, src=2, dst=5, dst_tile_layout=dst_tile)
-assert out.tile_layout is dst_tile
+assert out.tile_layout is db.tile_layout  # homogeneous bag: source layout
 for r in range(8):
-    want = db.tile(2 if r == 5 else r).to_layout(dst_tile)
+    want = db.tile(2 if r == 5 else r)
     got = out.tile(r)
     for i in range(N):
         for j in range(M//8):
             assert got[idx(i=i, j=j)] == want[idx(i=i, j=j)], (r, i, j)
+print('OK')
+"""
+    )
+    assert "OK" in out
+
+
+def test_send_recv_bystanders_untouched(distributed):
+    """Regression (ISSUE 2): ranks other than ``dst`` posted no recv, so a
+    differing receiver layout must NOT relayout their tiles — they pass
+    through bit-identical in the source layout."""
+    out = distributed(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import *
+from repro.core.layout import scalar, vector, into_blocks
+
+N, M = 4, 16
+col = scalar(np.float32) ^ vector('i', N) ^ vector('j', M)
+mesh = make_mesh((8,), ('r',))
+root = bag(col ^ into_blocks('j', 'R', num_blocks=8),
+           jnp.arange(N*M, dtype=jnp.float32).reshape(M, N))
+src_tile = scalar(np.float32) ^ vector('i', N) ^ vector('j', M//8)
+dst_tile = scalar(np.float32) ^ vector('j', M//8) ^ vector('i', N)  # transposed wire
+dt = mpi_traverser('R', traverser(root), mesh)
+db = scatter(root, src_tile, dt)
+out = send_recv(db, src=1, dst=6, dst_tile_layout=dst_tile)
+assert out.tile_layout is db.tile_layout
+for r in range(8):
+    if r == 6:
+        continue
+    # bit-identical raw buffers: no relayout round-trip was applied
+    assert np.array_equal(np.asarray(out.tile(r).data), np.asarray(db.tile(r).data)), r
+# the receiver's slot holds src's tile, unpacked into the source layout
+assert np.array_equal(np.asarray(out.tile(6).data), np.asarray(db.tile(1).data))
+print('OK')
+"""
+    )
+    assert "OK" in out
+
+
+def test_ring_shift_start_wait_matches_blocking(distributed):
+    """MPI_Isend/Irecv analogue: ``ring_shift_start`` + ``PendingTile.wait``
+    delivers exactly what the blocking ``ring_shift`` delivers, including a
+    fused endpoint relayout, and ``wait()`` handles several requests."""
+    out = distributed(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import *
+from repro.core.layout import scalar, vector, into_blocks
+
+col = scalar(np.float32) ^ vector('i', 4) ^ vector('j', 16)
+mesh = make_mesh((8,), ('r',))
+root = bag(col ^ into_blocks('j', 'R', num_blocks=8), jnp.arange(64.0))
+src_tile = scalar(np.float32) ^ vector('i', 4) ^ vector('j', 2)
+dst_tile = scalar(np.float32) ^ vector('j', 2) ^ vector('i', 4)
+dt = mpi_traverser('R', traverser(root), mesh)
+db = scatter(root, src_tile, dt)
+pend = ring_shift_start(db, 3, dst_tile_layout=dst_tile)
+assert isinstance(pend, PendingTile)
+got = pend.wait()
+want = ring_shift(db, 3, dst_tile_layout=dst_tile)
+assert got.tile_layout is dst_tile
+assert np.array_equal(np.asarray(got.data), np.asarray(want.data))
+# MPI_Waitall over two in-flight requests
+p1 = ring_shift_start(db, 1)
+p2 = permute_start(db, [(0, 7), (7, 0)])
+d1, d2 = wait(p1, p2)
+assert np.array_equal(np.asarray(d1.data), np.asarray(ring_shift(db, 1).data))
+assert np.array_equal(np.asarray(d2.data), np.asarray(permute(db, [(0, 7), (7, 0)]).data))
 print('OK')
 """
     )

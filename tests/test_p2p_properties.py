@@ -1,0 +1,123 @@
+"""Property-based tests (via the ``tests/_hyp.py`` shim) for the p2p layer.
+
+Two algebraic laws, checked over random layouts, shifts, and comm sizes:
+
+  * ring inverse  — composing ``ring_shift(s)`` with ``ring_shift(-s)`` is
+    the identity, even when the forward hop lands in a *different* endpoint
+    layout and the backward hop returns to the original one (so the fused
+    relayouts must be exact inverses, bit for bit);
+  * endpoint commutation — declaring a destination layout on the transfer is
+    the same as transferring layout-unchanged and relayouting afterwards:
+    the layout transform commutes with the data movement.
+
+Multi-device programs need the 8-fake-device subprocess, so each test runs
+the whole shim-driven property search inside ONE ``distributed`` subprocess
+(the strategies + ``given`` come from ``tests/_hyp.py`` there too: the real
+hypothesis when installed, the deterministic fallback otherwise).
+"""
+import os
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+
+_PRELUDE = f"""
+import sys
+sys.path.insert(0, {TESTS_DIR!r})
+import numpy as np, jax, jax.numpy as jnp
+from _hyp import given, settings, st
+from repro.core import *
+from repro.core.layout import scalar, vector, into_blocks, blocked
+
+import functools
+
+@functools.lru_cache(maxsize=None)
+def make_db(R, ni, jt, src_kind):
+    nj = R * jt
+    col = scalar(np.float32) ^ vector('i', ni) ^ vector('j', nj)
+    mesh = make_mesh((R,), ('r',))
+    root = bag(col ^ into_blocks('j', 'R', num_blocks=R),
+               jnp.arange(ni * nj, dtype=jnp.float32) + 1.0)
+    dt = mpi_traverser('R', traverser(root), mesh)
+    tile = tile_layout(src_kind, ni, jt)
+    return scatter(root, tile, dt)
+
+def tile_layout(kind, ni, jt):
+    if kind == 'col':
+        return scalar(np.float32) ^ vector('i', ni) ^ vector('j', jt)
+    if kind == 'row':
+        return scalar(np.float32) ^ vector('j', jt) ^ vector('i', ni)
+    # 'blocked': i physically tiled in 2 blocks, logical space unchanged
+    return (scalar(np.float32) ^ vector('i', ni) ^ vector('j', jt)
+            ^ blocked('i', 'I2', num_blocks=2))
+
+LAYOUT_KINDS = ['col', 'row', 'blocked']
+"""
+
+
+def test_ring_shift_inverse_identity(distributed):
+    out = distributed(
+        _PRELUDE
+        + """
+@settings(max_examples=15, deadline=None)
+@given(
+    st.sampled_from([2, 4, 8]),          # comm size
+    st.integers(-8, 8),                  # shift (any int, wraps mod R)
+    st.sampled_from([2, 4]),             # tile i extent
+    st.sampled_from([1, 2]),             # tile j extent
+    st.sampled_from(LAYOUT_KINDS),       # source layout
+    st.sampled_from(LAYOUT_KINDS),       # mid-transfer layout
+)
+def prop(R, shift, ni, jt, src_kind, mid_kind):
+    db = make_db(R, ni, jt, src_kind)
+    mid = tile_layout(mid_kind, ni, jt)
+    fwd = ring_shift(db, shift, dst_tile_layout=mid)
+    back = ring_shift(fwd, -shift, dst_tile_layout=db.tile_layout)
+    assert back.tile_layout is db.tile_layout
+    assert np.array_equal(np.asarray(back.data), np.asarray(db.data)), (R, shift, src_kind, mid_kind)
+    # the non-blocking form obeys the same law
+    pend = ring_shift_start(db, shift, dst_tile_layout=mid)
+    back2 = ring_shift(pend.wait(), -shift, dst_tile_layout=db.tile_layout)
+    assert np.array_equal(np.asarray(back2.data), np.asarray(db.data))
+
+prop()
+print('OK')
+"""
+    )
+    assert "OK" in out
+
+
+def test_endpoint_relayout_commutes_with_transfer(distributed):
+    out = distributed(
+        _PRELUDE
+        + """
+@settings(max_examples=15, deadline=None)
+@given(
+    st.sampled_from([2, 4, 8]),
+    st.integers(-3, 3),
+    st.sampled_from([2, 4]),
+    st.sampled_from([1, 2]),
+    st.sampled_from(LAYOUT_KINDS),
+    st.sampled_from(LAYOUT_KINDS),
+)
+def prop(R, shift, ni, jt, src_kind, dst_kind):
+    db = make_db(R, ni, jt, src_kind)
+    dst = tile_layout(dst_kind, ni, jt)
+    # transfer with the relayout fused into it ...
+    fused = ring_shift(db, shift, dst_tile_layout=dst)
+    # ... must equal transferring layout-unchanged, then relayouting each tile
+    plain = ring_shift(db, shift)
+    for r in range(R):
+        want = plain.tile(r).to_layout(dst)
+        assert np.array_equal(np.asarray(fused.tile(r).data), np.asarray(want.data)), (r, shift)
+    # and the same for a partial permute (matched pairs only)
+    pairs = [(i, (i + 1) % R) for i in range(R - 1)]
+    fused_p = permute(db, pairs, dst_tile_layout=dst)
+    plain_p = permute(db, pairs)
+    for r in range(R):
+        want = plain_p.tile(r).to_layout(dst)
+        assert np.array_equal(np.asarray(fused_p.tile(r).data), np.asarray(want.data)), (r, 'perm')
+
+prop()
+print('OK')
+"""
+    )
+    assert "OK" in out

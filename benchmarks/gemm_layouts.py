@@ -10,10 +10,12 @@ layout choices change performance but never semantics.
 
 Each row also carries the analytic per-rank comm-volume model (the 1-D
 algorithm replicates B: O(n^2); the SUMMA ring moves panels:
-O(n^2/sqrt(P))), and the SUMMA rows report the measured overlap
-classification of the compiled ring — ``overlapped/total`` collective
-permutes off the compute def-use chain (measured once per dataset; the
-classification is majors-independent)."""
+O(n^2/sqrt(P))), and the SUMMA rows report the measured kind-generic
+overlap classification of the compiled ring — ``overlapped/total``
+collectives per kind (ring permutes AND the reduce-scatter epilogue) off
+the compute def-use chain, plus the exposed (serialized) bytes that stay
+on it (measured once per dataset; the classification is
+majors-independent)."""
 import json
 import os
 import subprocess
@@ -59,16 +61,21 @@ for dataset in {datasets!r}:
                 C, ref = fn(ni, nj, nk, majors)
                 times.append(_t.perf_counter() - t0)
             np.testing.assert_allclose(C, ref, rtol=1e-3, atol=1e-3)
-            overlap = "-"
+            overlap, by_kind, exposed = "-", "-", ""
             if algo == "summa2d":
                 if overlap_cell is None:  # once per dataset: majors-independent
                     pfn, meta = summa_ring_program(ni=ni, nj=nj, nk=nk, grid=GRID, majors=majors)
                     st = hlo_walk.analyze(pfn.lower(*meta["abstract_args"]).compile().as_text())
-                    overlap_cell = "%d/%d" % (st.permutes_overlapped, len(st.permutes))
-                overlap = overlap_cell
+                    kinds = ";".join(
+                        "%s:%d/%d" % (k, row["overlapped"], row["overlapped"] + row["serialized"])
+                        for k, row in sorted(st.overlap_by_kind().items()))
+                    overlap_cell = ("%d/%d" % (st.permutes_overlapped, len(st.permutes)),
+                                    kinds, "%g" % st.exposed_collective_bytes())
+                overlap, by_kind, exposed = overlap_cell
             results.append(dict(dataset=dataset, algo=algo, majors=majors,
                                 mean_s=float(np.mean(times)), std_s=float(np.std(times)),
-                                model_comm_bytes=model["total_bytes"], overlap=overlap))
+                                model_comm_bytes=model["total_bytes"], overlap=overlap,
+                                overlap_by_kind=by_kind, exposed_bytes=exposed))
 print("RESULTS_JSON=" + json.dumps(results))
 """
 
@@ -85,10 +92,12 @@ def run(datasets=("MINI", "EXTRALARGE"), reps=3, algos=("panel1d", "summa2d")) -
         raise RuntimeError(proc.stderr[-3000:])
     line = [l for l in proc.stdout.splitlines() if l.startswith("RESULTS_JSON=")][0]
     results = json.loads(line[len("RESULTS_JSON="):])
-    out = ["dataset,algo,majors,us_per_call,std_us,model_comm_bytes,overlap"]
+    out = ["dataset,algo,majors,us_per_call,std_us,model_comm_bytes,overlap,"
+           "overlap_by_kind,exposed_bytes"]
     for r in results:
         out.append(f"{r['dataset']},{r['algo']},{r['majors']},{r['mean_s']*1e6:.0f},"
-                   f"{r['std_s']*1e6:.0f},{r['model_comm_bytes']},{r['overlap']}")
+                   f"{r['std_s']*1e6:.0f},{r['model_comm_bytes']},{r['overlap']},"
+                   f"{r['overlap_by_kind']},{r['exposed_bytes']}")
     return out
 
 

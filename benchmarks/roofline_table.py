@@ -1,10 +1,17 @@
 """Aggregate the dry-run JSON records into the §Roofline table
 (benchmarks/results/*.json -> CSV + markdown).
 
+The main table carries the kind-generic overlap evidence: how many
+collectives (of any kind) the def-use classifier proves hideable, and the
+``t_collective_exposed`` discount — the wire time of only the *serialized*
+bytes, which is what the modeled step charges.  ``--collective-overlap``
+emits the long-format per-kind exposed-vs-overlapped bytes table (one row
+per (arch, shape, collective kind)) that the nightly CI uploads.
+
 Also carries the GEMM communication-volume model table (``--gemm-model``):
 per-rank comm bytes of the 1-D row-panel algorithm (O(n^2), B replicated)
 vs the 2-D SUMMA ring (O(n^2/sqrt(P)) on a square grid), plus the measured
-collective-permute overlap classification of the compiled SUMMA trace.
+kind-generic overlap classification of the compiled SUMMA trace.
 """
 import glob
 import json
@@ -25,9 +32,11 @@ def load_records(results_dir=None, mesh="singlepod", tag="baseline"):
 
 
 def _overlap_cell(rf: dict) -> str:
-    """permute overlap as 'overlapped/total' counts; '-' when no permutes."""
-    n_over = rf.get("permutes_overlapped", 0)
-    n_ser = rf.get("permutes_serialized", 0)
+    """collective overlap as 'overlapped/total' counts; '-' when none.
+
+    Falls back to the permute-only fields for pre-refactor records."""
+    n_over = rf.get("collectives_overlapped", rf.get("permutes_overlapped", 0))
+    n_ser = rf.get("collectives_serialized", rf.get("permutes_serialized", 0))
     if not n_over and not n_ser:
         return "-"
     return f"{n_over}/{n_over + n_ser}"
@@ -35,41 +44,78 @@ def _overlap_cell(rf: dict) -> str:
 
 def run(mesh="singlepod", tag="baseline") -> list[str]:
     recs = load_records(mesh=mesh, tag=tag)
-    out = ["arch,shape,status,t_compute_s,t_memory_s,t_collective_s,dominant,"
-           "useful_ratio,roofline_fraction,permute_overlap"]
+    out = ["arch,shape,status,t_compute_s,t_memory_s,t_collective_s,"
+           "t_coll_exposed_s,dominant,useful_ratio,roofline_fraction,"
+           "collective_overlap"]
     for r in recs:
         if r.get("status") == "skipped":
-            out.append(f"{r['arch']},{r['shape']},skipped,,,,,,,")
+            out.append(f"{r['arch']},{r['shape']},skipped,,,,,,,,")
             continue
         if r.get("status") != "ok":
-            out.append(f"{r['arch']},{r['shape']},FAILED,,,,,,,")
+            out.append(f"{r['arch']},{r['shape']},FAILED,,,,,,,,")
             continue
         rf = r["roofline"]
+        t_exp = rf.get("t_collective_exposed", rf.get("t_collective", 0.0))
         out.append(
             f"{r['arch']},{r['shape']},ok,{rf['t_compute']:.4g},{rf['t_memory']:.4g},"
-            f"{rf['t_collective']:.4g},{rf['dominant']},{rf['useful_ratio']:.3f},"
-            f"{rf['roofline_fraction']:.4f},{_overlap_cell(rf)}"
+            f"{rf['t_collective']:.4g},{t_exp:.4g},{rf['dominant']},"
+            f"{rf['useful_ratio']:.3f},{rf['roofline_fraction']:.4f},"
+            f"{_overlap_cell(rf)}"
         )
     return out
+
+
+def collective_overlap_rows(mesh="singlepod", tag="baseline") -> list[str]:
+    """Long-format per-kind exposed-vs-overlapped bytes table (the nightly
+    artifact): one row per (arch, shape, collective kind)."""
+    recs = load_records(mesh=mesh, tag=tag)
+    out = ["arch,shape,kind,overlapped,serialized,total_bytes,exposed_bytes,"
+           "overlap_fraction"]
+    for r in recs:
+        if r.get("status") != "ok":
+            continue
+        by_kind = r["roofline"].get("coll_overlap_by_kind", {})
+        for kind, row in sorted(by_kind.items()):
+            frac = row.get("overlap_fraction")
+            out.append(
+                f"{r['arch']},{r['shape']},{kind},{row['overlapped']},"
+                f"{row['serialized']},{row['total_bytes']:.6g},"
+                f"{row['exposed_bytes']:.6g},"
+                f"{'' if frac is None else f'{frac:.4f}'}"
+            )
+    return out
+
+
+def _by_kind_cell(st) -> str:
+    """Compact per-kind overlap summary, e.g. 'collective-permute:3/3;
+    reduce-scatter:1/1' (overlapped/total per kind)."""
+    parts = []
+    for kind, row in sorted(st.overlap_by_kind().items()):
+        parts.append(f"{kind}:{row['overlapped']}/{row['overlapped'] + row['serialized']}")
+    return ";".join(parts) if parts else "-"
 
 
 def gemm_model_rows(datasets=None, grid=(2, 4), measure_overlap=False) -> list[str]:
     """The SUMMA comm-volume model table: per-rank bytes for both GEMM
     algorithms on the case-study datasets.  With ``measure_overlap`` the
     double-buffered SUMMA ring is lowered (8 fake devices must already be
-    configured) and the HLO overlap classification is appended."""
+    configured) and the kind-generic HLO overlap classification — per-kind
+    overlapped/total counts plus the exposed (serialized) bytes — is
+    appended."""
     from examples.distributed_gemm import comm_volume_model
     from repro.configs.gemm_case_study import DATASETS
 
     R, Cc = grid
     names = list(datasets) if datasets else list(DATASETS)
-    out = ["dataset,algo,ni,nj,nk,model_comm_bytes_per_rank,ring_bytes,overlap"]
+    out = ["dataset,algo,ni,nj,nk,model_comm_bytes_per_rank,ring_bytes,"
+           "overlap,overlap_by_kind,exposed_bytes"]
     for name in names:
         ni, nj, nk = DATASETS[name]
         m1 = comm_volume_model("panel1d", ni=ni, nj=nj, nk=nk, ranks=R * Cc)
-        out.append(f"{name},panel1d,{ni},{nj},{nk},{m1['total_bytes']},,-")
+        out.append(f"{name},panel1d,{ni},{nj},{nk},{m1['total_bytes']},,-,-,")
         m2 = comm_volume_model("summa2d", ni=ni, nj=nj, nk=nk, grid=grid)
-        overlap = "-"
+        overlap = by_kind = "-"
+        exposed = ""
         if measure_overlap:
             from repro.launch import hlo_walk
             from examples.distributed_gemm import summa_ring_program
@@ -77,7 +123,10 @@ def gemm_model_rows(datasets=None, grid=(2, 4), measure_overlap=False) -> list[s
             fn, meta = summa_ring_program(ni=ni, nj=nj, nk=nk, grid=grid)
             st = hlo_walk.analyze(fn.lower(*meta["abstract_args"]).compile().as_text())
             overlap = f"{st.permutes_overlapped}/{len(st.permutes)}"
-        out.append(f"{name},summa2d,{ni},{nj},{nk},{m2['total_bytes']},{m2['ring_bytes']},{overlap}")
+            by_kind = _by_kind_cell(st)
+            exposed = f"{st.exposed_collective_bytes():.6g}"
+        out.append(f"{name},summa2d,{ni},{nj},{nk},{m2['total_bytes']},"
+                   f"{m2['ring_bytes']},{overlap},{by_kind},{exposed}")
     return out
 
 
@@ -101,11 +150,17 @@ if __name__ == "__main__":
         if argv:
             raise SystemExit(f"unknown arguments with --gemm-model: {argv}")
         print("\n".join(gemm_model_rows(measure_overlap=measure)))
+    elif "--collective-overlap" in argv:
+        argv.remove("--collective-overlap")
+        mesh = argv[0] if argv else "singlepod"
+        tag = argv[1] if len(argv) > 1 else "baseline"
+        print("\n".join(collective_overlap_rows(mesh, tag)))
     else:
         flags = [a for a in argv if a.startswith("-")]
         if flags:
             raise SystemExit(f"unknown flags {flags}; usage: roofline_table.py "
-                             "[mesh] [tag] | --gemm-model [--measure-overlap]")
+                             "[mesh] [tag] | --gemm-model [--measure-overlap] "
+                             "| --collective-overlap [mesh] [tag]")
         mesh = argv[0] if argv else "singlepod"
         tag = argv[1] if len(argv) > 1 else "baseline"
         print("\n".join(run(mesh, tag)))

@@ -62,6 +62,7 @@ from .traverser import (
 from .traverser import hoist as hoist_trav
 from .traverser import set_length as set_length_trav
 from .relayout import RelayoutPlan, relayout, relayout_plan, transfer_kind
+from .request import Pending, wait_all
 from .dist import DistTraverser, mpi_traverser, mpi_cart_traverser
 from .collectives import (
     DistBag,
@@ -69,9 +70,14 @@ from .collectives import (
     gather,
     broadcast,
     all_gather_bag,
+    all_gather_dist,
     all_reduce_bag,
     reduce_scatter_bag,
     all_to_all_bag,
+    all_gather_start,
+    all_reduce_start,
+    reduce_scatter_start,
+    all_to_all_start,
     dist_full,
     dist_sharding,
     rank_map,
@@ -83,6 +89,8 @@ from .p2p import (
     ring_shift,
     ring_shift_start,
     send_recv,
+    shard_ring_shift,
+    shard_ring_shift_start,
     wait,
 )
 
@@ -127,18 +135,27 @@ __all__ = [
     "gather",
     "broadcast",
     "all_gather_bag",
+    "all_gather_dist",
     "all_reduce_bag",
     "reduce_scatter_bag",
     "all_to_all_bag",
+    "all_gather_start",
+    "all_reduce_start",
+    "reduce_scatter_start",
+    "all_to_all_start",
     "dist_full",
     "dist_sharding",
     "rank_map",
     "DistBag",
+    "Pending",
+    "wait_all",
     "send_recv",
     "permute",
     "ring_shift",
     "PendingTile",
     "permute_start",
     "ring_shift_start",
+    "shard_ring_shift",
+    "shard_ring_shift_start",
     "wait",
 ]

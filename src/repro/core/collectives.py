@@ -18,10 +18,24 @@ once (a communicator grid, e.g. ``('rows', 'cols')`` — the paper's
 operates along; the remaining grid dimensions act as independent
 sub-communicators, exactly like ``MPI_Comm_split`` keyed by the other grid
 coordinates.
+
+Non-blocking collectives
+------------------------
+Every reduce collective has a non-blocking twin — ``all_gather_start``,
+``all_reduce_start``, ``reduce_scatter_start``, ``all_to_all_start`` — the
+``MPI_Iallgather``/``Iallreduce``/``Ireduce_scatter``/``Ialltoall``
+analogues.  The ``*_start`` form *issues* the relayout-fused operation and
+returns a :class:`repro.core.request.Pending` immediately; compute traced
+between start and :meth:`~repro.core.request.Pending.wait` carries no data
+dependence on the collective, so the XLA scheduler may overlap the two.  The
+blocking collectives are literally ``*_start(...).wait()`` — one
+issue/complete code path, so the two forms are bit-identical by
+construction.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Any, Callable, Sequence
 
 import jax
@@ -33,17 +47,25 @@ from .compat import shard_map
 from .dims import LayoutError, check_same_space, prod
 from .layout import Axis, Layout
 from .relayout import relayout
+from .request import Pending, wait_all
 from .dist import DistTraverser
 
 __all__ = [
     "DistBag",
+    "Pending",
+    "wait_all",
     "scatter",
     "gather",
     "broadcast",
     "all_gather_bag",
+    "all_gather_dist",
     "all_reduce_bag",
     "reduce_scatter_bag",
     "all_to_all_bag",
+    "all_gather_start",
+    "all_reduce_start",
+    "reduce_scatter_start",
+    "all_to_all_start",
     "dist_full",
     "dist_sharding",
     "rank_map",
@@ -71,6 +93,10 @@ class DistBag:
     tile_layout: Layout
     dt: DistTraverser
     rank_dims: tuple[str, ...]
+    # per-rank tile layouts for same-shape heterogeneous bags (e.g. an
+    # all_gather whose ranks declared different destination layouts); when
+    # set, ``tile(r)`` views rank r's buffer through its own layout.
+    tile_layouts: tuple[Layout, ...] | None = None
 
     def __post_init__(self):
         if isinstance(self.rank_dims, str):  # tolerate the pre-grid call style
@@ -101,7 +127,13 @@ class DistBag:
         coords = (rank,) if isinstance(rank, int) else tuple(rank)
         if len(coords) != len(self.rank_dims):
             raise LayoutError(f"rank {rank!r} does not address grid {self.rank_dims}")
-        return Bag(self.data[coords], self.tile_layout)
+        layout = self.tile_layout
+        if self.tile_layouts is not None:
+            flat = 0
+            for c, s in zip(coords, self.grid_shape):
+                flat = flat * s + c
+            layout = self.tile_layouts[flat]
+        return Bag(self.data[coords], layout)
 
     def with_data(self, data) -> "DistBag":
         return dataclasses.replace(self, data=data)
@@ -250,9 +282,116 @@ def broadcast(b: Bag, dt: DistTraverser, dst_layout: Layout | None = None) -> Ba
     return Bag(data, layout)
 
 
+def _issue_all_gather(
+    dist: DistBag,
+    root_layout: Layout | Sequence[Layout],
+    rank_dims: Sequence[str],
+) -> DistBag:
+    """Issue the true ``jax.lax.all_gather`` along ``rank_dims`` (shared by the
+    blocking and non-blocking entry points).
+
+    Unlike :func:`gather`, which assembles the root structure through the
+    host-visible replicated array, this moves the tiles with the on-device
+    all-gather and applies each rank's *destination-layout* transform inside
+    the same XLA program as the transfer — the ``MPI_Allgather`` whose receive
+    datatype is honored per rank.  ``root_layout`` may be a single layout
+    (every rank declares the same destination) or a sequence of per-rank
+    layouts over the same index space and physical shape (1-D communicators
+    only); the per-rank transform is selected by the communicator rank.
+    """
+    dt = dist.dt
+    layouts = (
+        [root_layout] if isinstance(root_layout, Layout) else list(root_layout)
+    )
+    if len(layouts) > 1 and len(rank_dims) != 1:
+        raise LayoutError("per-rank all_gather layouts need a 1-D communicator")
+    R_total = prod(dt.comm_size(d) for d in rank_dims)
+    if len(layouts) not in (1, R_total):
+        raise LayoutError(
+            f"all_gather: got {len(layouts)} destination layouts for comm size {R_total}"
+        )
+    for l in layouts:
+        _check_scatter_spaces(l, dist.tile_layout, dt, rank_dims)
+        if l.shape != layouts[0].shape:
+            raise LayoutError(
+                f"per-rank all_gather layouts must share one physical shape: "
+                f"{l.shape} != {layouts[0].shape}"
+            )
+    leaves = _all_leaves(dt, rank_dims)
+    xfer = _transfer_layout(dist.tile_layout, leaves)
+    axes: tuple[str, ...] = ()
+    for d in rank_dims:
+        axes += tuple(dt.rank_mesh_axes(d))
+
+    def tile_fn(t):
+        g = jax.lax.all_gather(t, axes, axis=0, tiled=False)
+        g = g.reshape(xfer.shape)
+        if len(layouts) == 1:
+            return relayout(g, xfer, layouts[0])
+        return jax.lax.switch(
+            _flat_rank(dt, rank_dims[0]),
+            [lambda x, _l=l: relayout(x, xfer, _l) for l in layouts],
+            g,
+        )
+
+    # keep the bag's full grid distribution: ranks outside ``rank_dims``
+    # still hold independent (sub-communicator) results, ranks inside hold
+    # replicated copies — exactly MPI_Allgather's per-rank receive buffers.
+    out = _shard_collective(dist, layouts[0], tile_fn)
+    if len(layouts) > 1:
+        # tile_layouts is indexed by the *full-grid* flat rank; the declared
+        # layouts key on the gathered (1-D) communicator dim only, so expand
+        # them across the other grid coordinates (every sub-communicator of
+        # the grid sees the same per-rank declarations)
+        pos = out.rank_dims.index(rank_dims[0])
+        full = tuple(
+            layouts[coords[pos]]
+            for coords in itertools.product(*(range(s) for s in out.grid_shape))
+        )
+        out = dataclasses.replace(out, tile_layouts=full)
+    return out
+
+
+def all_gather_start(
+    dist: DistBag,
+    root_layout: Layout | Sequence[Layout],
+    *,
+    rank_dim: str | Sequence[str] | None = None,
+) -> Pending:
+    """Non-blocking all-gather (``MPI_Iallgather``): issue the transfer and
+    return a :class:`Pending` whose :meth:`~Pending.wait` hands back a
+    :class:`DistBag` in which every rank of the ``rank_dim`` communicator
+    holds the full gathered structure in its destination layout."""
+    rank_dims = _as_rank_dims(dist.dt, rank_dim) if rank_dim is not None else dist.rank_dims
+    for d in rank_dims:
+        if d not in dist.rank_dims:
+            raise LayoutError(f"bag is not distributed over {d!r} (has {dist.rank_dims})")
+    return Pending(_issue_all_gather(dist, root_layout, rank_dims), op="all_gather")
+
+
+def all_gather_dist(
+    dist: DistBag,
+    root_layout: Layout | Sequence[Layout],
+    *,
+    rank_dim: str | Sequence[str] | None = None,
+) -> DistBag:
+    """Blocking all-gather returning the per-rank receive buffers as a
+    :class:`DistBag` (``all_gather_start(...).wait()``)."""
+    return all_gather_start(dist, root_layout, rank_dim=rank_dim).wait()
+
+
 def all_gather_bag(dist: DistBag, root_layout: Layout) -> Bag:
-    """Every rank ends with the full structure in ``root_layout``."""
-    return gather(dist, root_layout)  # single-controller: gather is replicated
+    """Every rank ends with the full structure in ``root_layout``.
+
+    Implemented over the true on-device ``jax.lax.all_gather`` (not the
+    host-root :func:`gather`, which remains available as the reference
+    oracle): the tiles are gathered and relayouted inside one XLA program,
+    and the replicated result is returned as a root :class:`Bag`.
+    """
+    db = all_gather_dist(dist, root_layout)
+    first = db.data[(0,) * len(dist.rank_dims)]  # every rank holds a full copy
+    out = jax.device_put(first, NamedSharding(dist.dt.mesh, P()))
+    return Bag(out, root_layout)
 
 
 def dist_sharding(
@@ -292,19 +431,14 @@ def _resolve_reduce(op: str):
     return _REDUCERS[op]
 
 
-def all_reduce_bag(
+def _issue_all_reduce(
     dist: DistBag,
-    op: str = "add",
-    *,
-    rank_dim: str | None = None,
-    out_tile_layout: Layout | None = None,
+    op: str,
+    rank_dim: str | None,
+    out_tile_layout: Layout | None,
 ) -> DistBag:
-    """Reduce tiles elementwise across the ``rank_dim`` communicator; every
-    rank of that communicator ends with the same reduced tile (MPI_Allreduce).
-
-    ``out_tile_layout`` may differ from the input tile layout — the relayout
-    fuses into the same XLA program as the reduction.
-    """
+    """Issue the relayout-fused all-reduce (shared by the blocking and
+    non-blocking entry points)."""
     rank_dim = rank_dim or dist.rank_dims[0]
     if rank_dim not in dist.rank_dims:
         raise LayoutError(f"bag is not distributed over {rank_dim!r} (has {dist.rank_dims})")
@@ -325,6 +459,36 @@ def all_reduce_bag(
     return _shard_collective(dist, out_layout, tile_fn)
 
 
+def all_reduce_start(
+    dist: DistBag,
+    op: str = "add",
+    *,
+    rank_dim: str | None = None,
+    out_tile_layout: Layout | None = None,
+) -> Pending:
+    """Non-blocking all-reduce (``MPI_Iallreduce``): issue the reduction and
+    return a :class:`Pending` immediately."""
+    return Pending(_issue_all_reduce(dist, op, rank_dim, out_tile_layout), op="all_reduce")
+
+
+def all_reduce_bag(
+    dist: DistBag,
+    op: str = "add",
+    *,
+    rank_dim: str | None = None,
+    out_tile_layout: Layout | None = None,
+) -> DistBag:
+    """Reduce tiles elementwise across the ``rank_dim`` communicator; every
+    rank of that communicator ends with the same reduced tile (MPI_Allreduce).
+
+    ``out_tile_layout`` may differ from the input tile layout — the relayout
+    fuses into the same XLA program as the reduction.
+    """
+    return all_reduce_start(
+        dist, op, rank_dim=rank_dim, out_tile_layout=out_tile_layout
+    ).wait()
+
+
 def _fresh_axis_name(layout: Layout, base: str) -> str:
     name = base
     while any(a.name == name for a in layout.axes) or any(d == name for d, _ in layout.dim_map):
@@ -342,24 +506,15 @@ def _block_over(layout: Layout, dim: str, name: str, R: int) -> Layout:
     return Layout(layout.dtype, axes, dim_map)
 
 
-def reduce_scatter_bag(
+def _issue_reduce_scatter(
     dist: DistBag,
     out_tile_layout: Layout,
-    *,
-    scatter_dim: str | None = None,
-    op: str = "add",
-    rank_dim: str | None = None,
+    scatter_dim: str | None,
+    op: str,
+    rank_dim: str | None,
 ) -> DistBag:
-    """Elementwise-reduce tiles across the ``rank_dim`` communicator, then
-    scatter the result: communicator rank ``r`` keeps logical block ``r`` of
-    ``scatter_dim`` (MPI_Reduce_scatter_block).
-
-    The output tile layout is free — rank ``r``'s block lands directly in
-    ``out_tile_layout``, with the transform fused into the transfer.  Index
-    spaces are checked at trace time: the output space must equal the input
-    space except that ``scatter_dim``'s extent shrinks by the communicator
-    size.
-    """
+    """Issue the relayout-fused reduce-scatter (shared by the blocking and
+    non-blocking entry points)."""
     rank_dim = rank_dim or dist.rank_dims[0]
     if rank_dim not in dist.rank_dims:
         raise LayoutError(f"bag is not distributed over {rank_dim!r} (has {dist.rank_dims})")
@@ -402,6 +557,45 @@ def reduce_scatter_bag(
     return _shard_collective(dist, out_tile_layout, tile_fn)
 
 
+def reduce_scatter_start(
+    dist: DistBag,
+    out_tile_layout: Layout,
+    *,
+    scatter_dim: str | None = None,
+    op: str = "add",
+    rank_dim: str | None = None,
+) -> Pending:
+    """Non-blocking reduce-scatter (``MPI_Ireduce_scatter``): issue the
+    reduce+scatter and return a :class:`Pending` immediately."""
+    return Pending(
+        _issue_reduce_scatter(dist, out_tile_layout, scatter_dim, op, rank_dim),
+        op="reduce_scatter",
+    )
+
+
+def reduce_scatter_bag(
+    dist: DistBag,
+    out_tile_layout: Layout,
+    *,
+    scatter_dim: str | None = None,
+    op: str = "add",
+    rank_dim: str | None = None,
+) -> DistBag:
+    """Elementwise-reduce tiles across the ``rank_dim`` communicator, then
+    scatter the result: communicator rank ``r`` keeps logical block ``r`` of
+    ``scatter_dim`` (MPI_Reduce_scatter_block).
+
+    The output tile layout is free — rank ``r``'s block lands directly in
+    ``out_tile_layout``, with the transform fused into the transfer.  Index
+    spaces are checked at trace time: the output space must equal the input
+    space except that ``scatter_dim``'s extent shrinks by the communicator
+    size.
+    """
+    return reduce_scatter_start(
+        dist, out_tile_layout, scatter_dim=scatter_dim, op=op, rank_dim=rank_dim
+    ).wait()
+
+
 def _dense_layout(dtype, items: Sequence[tuple[str, int]]) -> Layout:
     """Row-major layout over ``items`` (dim, extent) pairs, outer..inner."""
     axes = tuple(Axis(d, s) for d, s in items)
@@ -409,23 +603,15 @@ def _dense_layout(dtype, items: Sequence[tuple[str, int]]) -> Layout:
     return Layout(dtype, axes, dim_map)
 
 
-def all_to_all_bag(
+def _issue_all_to_all(
     dist: DistBag,
     out_tile_layout: Layout,
-    *,
     split_dim: str,
     concat_dim: str,
-    rank_dim: str | None = None,
+    rank_dim: str | None,
 ) -> DistBag:
-    """MPI_Alltoall along the ``rank_dim`` communicator: each rank splits its
-    tile into R blocks of ``split_dim``, sends block ``j`` to rank ``j``, and
-    concatenates the received blocks (in rank order) along ``concat_dim``.
-
-    This is the layout-agnostic reshard primitive: a bag tiled along one
-    logical dim becomes tiled along another, with both endpoint tile layouts
-    chosen freely.  Trace-time checks: ``split_dim`` shrinks by R,
-    ``concat_dim`` grows by R, everything else matches.
-    """
+    """Issue the relayout-fused all-to-all (shared by the blocking and
+    non-blocking entry points)."""
     if split_dim == concat_dim:
         raise LayoutError("all_to_all: split_dim and concat_dim must differ")
     rank_dim = rank_dim or dist.rank_dims[0]
@@ -472,6 +658,44 @@ def all_to_all_bag(
         return relayout(y, recv_l, out_tile_layout)
 
     return _shard_collective(dist, out_tile_layout, tile_fn)
+
+
+def all_to_all_start(
+    dist: DistBag,
+    out_tile_layout: Layout,
+    *,
+    split_dim: str,
+    concat_dim: str,
+    rank_dim: str | None = None,
+) -> Pending:
+    """Non-blocking all-to-all (``MPI_Ialltoall``): issue the reshard and
+    return a :class:`Pending` immediately."""
+    return Pending(
+        _issue_all_to_all(dist, out_tile_layout, split_dim, concat_dim, rank_dim),
+        op="all_to_all",
+    )
+
+
+def all_to_all_bag(
+    dist: DistBag,
+    out_tile_layout: Layout,
+    *,
+    split_dim: str,
+    concat_dim: str,
+    rank_dim: str | None = None,
+) -> DistBag:
+    """MPI_Alltoall along the ``rank_dim`` communicator: each rank splits its
+    tile into R blocks of ``split_dim``, sends block ``j`` to rank ``j``, and
+    concatenates the received blocks (in rank order) along ``concat_dim``.
+
+    This is the layout-agnostic reshard primitive: a bag tiled along one
+    logical dim becomes tiled along another, with both endpoint tile layouts
+    chosen freely.  Trace-time checks: ``split_dim`` shrinks by R,
+    ``concat_dim`` grows by R, everything else matches.
+    """
+    return all_to_all_start(
+        dist, out_tile_layout, split_dim=split_dim, concat_dim=concat_dim, rank_dim=rank_dim
+    ).wait()
 
 
 # -----------------------------------------------------------------------------

@@ -18,20 +18,33 @@ Non-blocking transfers
 Real MPI GEMMs hide the ring exchange behind the local multiply with
 ``MPI_Isend``/``MPI_Irecv``; the analogue here is the ``*_start`` family,
 which *issues* the relayout-fused transfer and hands back a
-:class:`PendingTile` — the request-object analogue — whose :meth:`~
-PendingTile.wait` marks the completion point with
-``jax.lax.optimization_barrier``.  Correspondence table:
+:class:`repro.core.request.Pending` — the request-object analogue — whose
+:meth:`~repro.core.request.Pending.wait` marks the completion point with
+``jax.lax.optimization_barrier``.  The same request layer now covers every
+collective (``repro.core.collectives``); correspondence table:
 
-=========================  ====================================================
-MPI                        repro.core.p2p
-=========================  ====================================================
-``MPI_Send``/``MPI_Recv``  :func:`send_recv` (one matched blocking pair)
-``MPI_Sendrecv`` ring      :func:`ring_shift` / :func:`permute`
-``MPI_Isend``/``Irecv``    :func:`ring_shift_start` / :func:`permute_start`
-``MPI_Request``            :class:`PendingTile`
-``MPI_Wait``               :meth:`PendingTile.wait`
-``MPI_Waitall``            :func:`wait` over several pending tiles
-=========================  ====================================================
+=============================  ================================================
+MPI                            repro.core
+=============================  ================================================
+``MPI_Send``/``MPI_Recv``      :func:`send_recv` (one matched blocking pair)
+``MPI_Sendrecv`` ring          :func:`ring_shift` / :func:`permute`
+``MPI_Isend``/``Irecv``        :func:`ring_shift_start` / :func:`permute_start`
+``MPI_Request``                :class:`Pending` (``PendingTile`` is the p2p
+                               alias from PR 2)
+``MPI_Wait``                   :meth:`Pending.wait`
+``MPI_Waitall``                :func:`wait` / ``request.wait_all`` over
+                               several pending requests
+``MPI_Iallgather``             ``collectives.all_gather_start``
+``MPI_Iallreduce``             ``collectives.all_reduce_start``
+``MPI_Ireduce_scatter``        ``collectives.reduce_scatter_start``
+``MPI_Ialltoall``              ``collectives.all_to_all_start``
+=============================  ================================================
+
+Model-stack rings (sequence-parallel ring attention, which runs *inside* a
+``shard_map`` body on raw per-device arrays rather than on ``DistBag``)
+use the shard-level twins :func:`shard_ring_shift` /
+:func:`shard_ring_shift_start` — same request object, same completion
+semantics, no bag plumbing.
 
 Semantics in the XLA world: a started transfer is a value with *no data
 dependence on any compute issued between start and wait*, so the scheduler is
@@ -48,7 +61,6 @@ analyze` classifies every ``collective-permute`` in the optimized HLO as
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Iterable, Sequence
 
 import jax
@@ -57,6 +69,7 @@ import jax.numpy as jnp
 from .dims import LayoutError, check_same_space
 from .layout import Layout
 from .relayout import relayout
+from .request import Pending, wait_all
 from .collectives import DistBag, _shard_collective
 
 __all__ = [
@@ -66,6 +79,8 @@ __all__ = [
     "PendingTile",
     "permute_start",
     "ring_shift_start",
+    "shard_ring_shift",
+    "shard_ring_shift_start",
     "wait",
 ]
 
@@ -157,24 +172,10 @@ def ring_shift(
 # -----------------------------------------------------------------------------
 # non-blocking transfers (MPI_Isend / MPI_Irecv / MPI_Wait analogue)
 # -----------------------------------------------------------------------------
-@dataclasses.dataclass(frozen=True)
-class PendingTile:
-    """An in-flight transfer: the request-object analogue of ``MPI_Request``.
-
-    Holds the already-issued ``DistBag`` whose ``collective-permute`` carries
-    no data dependence on compute issued after the start — the scheduler may
-    overlap it freely.  :meth:`wait` is the completion point.
-    """
-
-    dist: DistBag
-    op: str = "permute"
-
-    def wait(self) -> DistBag:
-        """Complete the transfer (``MPI_Wait``): pins the received buffer
-        behind an ``optimization_barrier`` so the in-flight value stays an
-        independent chain through XLA's optimization passes, then hands back
-        the received tiles as a normal :class:`DistBag`."""
-        return self.dist.with_data(jax.lax.optimization_barrier(self.dist.data))
+# PR 2's request object, promoted in this refactor to the generic Pending of
+# repro.core.request (one request type for p2p AND the reduce collectives);
+# the name survives as the p2p-flavoured alias.
+PendingTile = Pending
 
 
 def permute_start(
@@ -183,10 +184,10 @@ def permute_start(
     *,
     rank_dim: str | None = None,
     dst_tile_layout: Layout | None = None,
-) -> PendingTile:
+) -> Pending:
     """Non-blocking :func:`permute`: issue the relayout-fused transfer and
-    return a :class:`PendingTile` immediately (``MPI_Isend``/``MPI_Irecv``)."""
-    return PendingTile(_issue_permute(dist, perm, rank_dim, dst_tile_layout), op="permute")
+    return a :class:`Pending` immediately (``MPI_Isend``/``MPI_Irecv``)."""
+    return Pending(_issue_permute(dist, perm, rank_dim, dst_tile_layout), op="permute")
 
 
 def ring_shift_start(
@@ -195,26 +196,49 @@ def ring_shift_start(
     *,
     rank_dim: str | None = None,
     dst_tile_layout: Layout | None = None,
-) -> PendingTile:
+) -> Pending:
     """Non-blocking :func:`ring_shift`: the double-buffered SUMMA issues this
     *before* the local GEMM of the step and waits after, so step ``k``'s panel
     rotation overlaps step ``k``'s multiply."""
-    return PendingTile(
+    return Pending(
         ring_shift(dist, shift, rank_dim=rank_dim, dst_tile_layout=dst_tile_layout),
         op="ring_shift",
     )
 
 
-def wait(*pending: PendingTile):
+def wait(*pending: Pending):
     """Complete one or more pending transfers (``MPI_Wait`` / ``MPI_Waitall``).
 
     Returns the received :class:`DistBag` for a single request, a tuple of
     them for several.
     """
-    if not pending:
-        raise LayoutError("wait() needs at least one PendingTile")
-    done = tuple(p.wait() for p in pending)
-    return done[0] if len(done) == 1 else done
+    return wait_all(*pending)
+
+
+# -----------------------------------------------------------------------------
+# shard-level rings (inside shard_map bodies, raw per-device arrays)
+# -----------------------------------------------------------------------------
+def shard_ring_shift(x, axis_name: str, shift: int = 1):
+    """The inside-``shard_map`` twin of :func:`ring_shift`: rotate a pytree of
+    per-device arrays one hop along the ``axis_name`` ring (device ``r``
+    receives device ``r - shift``'s value).
+
+    The ``DistBag`` form carries its communicator with it; inside a
+    ``shard_map`` body the mesh axis *is* the communicator, so this form
+    takes the axis name directly — it is what the model stack's
+    sequence-parallel ring attention uses to rotate KV blocks.
+    """
+    R = jax.lax.psum(1, axis_name)  # static axis size under shard_map
+    pairs = [(i, (i + shift) % R) for i in range(R)]
+    return jax.tree_util.tree_map(lambda a: jax.lax.ppermute(a, axis_name, pairs), x)
+
+
+def shard_ring_shift_start(x, axis_name: str, shift: int = 1) -> Pending:
+    """Non-blocking :func:`shard_ring_shift`: issue the rotation and return a
+    :class:`Pending` immediately — the double-buffered ring attention issues
+    this *before* the step's local attention and waits after, exactly like
+    the SUMMA ring issues its panel rotation before the local GEMM."""
+    return Pending(shard_ring_shift(x, axis_name, shift), op="ring_shift")
 
 
 def send_recv(

@@ -1,0 +1,90 @@
+"""The generic non-blocking request object (``MPI_Request`` analogue).
+
+PR 2 introduced the pattern for point-to-point transfers only
+(``PendingTile``); this module promotes it to the whole communication layer:
+*every* collective gains a ``*_start`` twin that issues the relayout-fused
+data movement and hands back a :class:`Pending`, whose :meth:`~Pending.wait`
+is the completion point.  The blocking collectives are literally
+``*_start(...).wait()`` — one issue/complete code path.
+
+Semantics in the XLA world: a started operation is a value with *no data
+dependence on any compute issued between start and wait*, so the scheduler is
+free to run the collective concurrently with independent local compute.  The
+``optimization_barrier`` at the wait point keeps the in-flight buffer an
+independent chain during XLA's optimization passes (it is erased after
+optimization, leaving pure dataflow).  Whether the overlap actually holds in
+the compiled program is provable statically by
+:func:`repro.launch.hlo_walk.analyze`, which classifies every collective of
+every kind as *overlapped* or *serialized* from its def-use chains.
+
+Correspondence table:
+
+=========================  ====================================================
+MPI                        repro.core
+=========================  ====================================================
+``MPI_Request``            :class:`Pending`
+``MPI_Wait``               :meth:`Pending.wait`
+``MPI_Waitall``            :func:`wait_all`
+``MPI_Isend``/``Irecv``    ``p2p.ring_shift_start`` / ``p2p.permute_start``
+``MPI_Iallgather``         ``collectives.all_gather_start``
+``MPI_Iallreduce``         ``collectives.all_reduce_start``
+``MPI_Ireduce_scatter``    ``collectives.reduce_scatter_start``
+``MPI_Ialltoall``          ``collectives.all_to_all_start``
+=========================  ====================================================
+
+A :class:`Pending` can carry any DistBag-shaped result: a ``DistBag``, a
+``Bag``, or (inside ``shard_map`` bodies, where the model stack's rings
+operate on raw per-device arrays) any pytree of arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+__all__ = ["Pending", "wait_all"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Pending:
+    """An in-flight collective: the request-object analogue of ``MPI_Request``.
+
+    Holds the already-issued result — whose data movement carries no data
+    dependence on compute issued after the start, so the scheduler may
+    overlap it freely.  :meth:`wait` is the completion point.
+    """
+
+    result: Any  # DistBag | Bag | pytree of arrays
+    op: str = "collective"
+
+    @property
+    def dist(self):
+        """Back-compat alias from the PR-2 ``PendingTile`` days."""
+        return self.result
+
+    def wait(self):
+        """Complete the operation (``MPI_Wait``): pins the received buffer
+        behind an ``optimization_barrier`` so the in-flight value stays an
+        independent chain through XLA's optimization passes, then hands back
+        the result (``DistBag``/``Bag``/array pytree, as issued)."""
+        r = self.result
+        if hasattr(r, "with_data"):  # DistBag / Bag
+            return r.with_data(jax.lax.optimization_barrier(r.data))
+        return jax.lax.optimization_barrier(r)
+
+
+def wait_all(*pending: Pending):
+    """Complete one or more pending operations (``MPI_Wait``/``MPI_Waitall``).
+
+    Returns the completed result for a single request, a tuple of them for
+    several.  Completion order is irrelevant: each request pins its own
+    buffer, so ``wait_all(p1, p2)`` and ``(p1.wait(), p2.wait())`` are
+    bit-identical.
+    """
+    from .dims import LayoutError
+
+    if not pending:
+        raise LayoutError("wait_all() needs at least one Pending request")
+    done = tuple(p.wait() for p in pending)
+    return done[0] if len(done) == 1 else done

@@ -22,6 +22,8 @@ Usage:
   python -m repro.launch.dryrun --all [--multi-pod] [--out benchmarks/results]
   python -m repro.launch.dryrun --arch ... --shape ... --attn-mode sp \
          --set moe_capacity_factor=1.0 --microbatches 4
+  python -m repro.launch.dryrun --summa-gemm   # SUMMA ring: 0 serialized gate
+  python -m repro.launch.dryrun --sp-ring      # ring attention: same gate
 """
 
 import argparse
@@ -150,6 +152,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False, attn_mode
         "mesh": rep.mesh,
         "chips": chips,
         "attn_mode": recipe.attn_mode,
+        "sp_ring": recipe.sp_ring,
         "compile_seconds": round(compile_s, 1),
         "memory": _mem_dict(mem),
         "cost": {k: cost.get(k) for k in ("flops", "bytes accessed") if k in cost},
@@ -164,7 +167,9 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False, attn_mode
         }))
         print("  overlap:", json.dumps({
             k: record["roofline"][k]
-            for k in ("permutes_overlapped", "permutes_serialized", "permute_overlap_fraction")
+            for k in ("collectives_overlapped", "collectives_serialized",
+                      "collective_overlap_fraction", "coll_exposed_bytes",
+                      "t_collective_exposed")
         }))
     return record, compiled
 
@@ -173,10 +178,12 @@ def summa_dryrun(*, ni: int = 256, nj: int = 256, nk: int = 256,
                  grid: tuple[int, int] = (2, 4), majors: str = "I/I/K",
                  verbose: bool = True) -> dict:
     """Dry-run the SUMMA ring program (both variants): lower + compile on the
-    fake mesh, classify every ring ``collective-permute`` from the optimized
-    HLO, and compare measured collective bytes against the analytic
-    comm-volume model — the static proof that the double-buffered rewrite
-    keeps 0 transfers on the compute chain, without multi-host hardware.
+    fake mesh, classify every collective of every kind (ring
+    ``collective-permute``s AND the reduce-scatter epilogue) from the
+    optimized HLO, and compare measured collective bytes against the
+    analytic comm-volume model — the static proof that the double-buffered
+    rewrite keeps 0 transfers on the compute chain, without multi-host
+    hardware.
     """
     from repro.launch import hlo_walk
 
@@ -199,6 +206,72 @@ def summa_dryrun(*, ni: int = 256, nj: int = 256, nk: int = 256,
             "hlo_permute_bytes": st.coll_by_op.get("collective-permute", 0.0),
             "model_ring_bytes": meta["comm_model"]["ring_bytes"],
             "model_total_bytes": meta["comm_model"]["total_bytes"],
+            # kind-generic classification: every collective kind, not just
+            # the ring permutes — the epilogue reduce-scatter shows up here
+            "collectives_serialized_any_kind": st.collectives_serialized(),
+            "collectives_overlapped_any_kind": st.collectives_overlapped(),
+            "exposed_bytes": st.exposed_collective_bytes(),
+            "overlap_by_kind": st.overlap_by_kind(),
+        }
+    if verbose:
+        print(json.dumps(out, indent=1))
+    return out
+
+
+def sp_ring_dryrun(*, batch: int = 2, seq: int = 256, d_model: int = 64,
+                   n_heads: int = 4, n_kv: int = 2, head_dim: int = 16,
+                   grid: tuple[int, int] = (2, 4), verbose: bool = True) -> dict:
+    """Dry-run the sequence-parallel ring-attention trace (both variants):
+    lower+compile a GQA attention op — QKV projections, the double-buffered
+    KV ring, output projection — under an ``sp_ring`` recipe on a
+    (data, model) fake mesh, and classify every collective of every kind.
+
+    The acceptance gate: 0 serialized collectives — the KV rotations stay
+    off the compute def-use chain even though their payloads were *produced*
+    by the projection GEMMs, because each step's local attention is an
+    independent sibling branch the scheduler can hide the transfer behind.
+    """
+    from types import SimpleNamespace
+
+    from repro.launch import hlo_walk
+    from repro.models import attention as attn
+    from repro.models.sharding import make_recipe, use_recipe
+    from repro.core.compat import make_mesh
+
+    cfg = SimpleNamespace(n_heads=n_heads, n_kv=n_kv, head_dim=head_dim,
+                          d_model=d_model, d_ff=4 * d_model,
+                          vocab_padded=256, n_experts=0, family="dense")
+    mesh = make_mesh(grid, ("data", "model"))
+    params = {
+        "wq": jax.ShapeDtypeStruct((d_model, n_heads, head_dim), np.float32),
+        "wk": jax.ShapeDtypeStruct((d_model, n_kv, head_dim), np.float32),
+        "wv": jax.ShapeDtypeStruct((d_model, n_kv, head_dim), np.float32),
+        "wo": jax.ShapeDtypeStruct((n_heads, head_dim, d_model), np.float32),
+    }
+    x = jax.ShapeDtypeStruct((batch, seq, d_model), np.float32)
+
+    out: dict = {"batch": batch, "seq": seq, "d_model": d_model,
+                 "n_heads": n_heads, "n_kv": n_kv, "grid": list(grid)}
+    for variant, db in (("double_buffered", True), ("blocking", False)):
+        recipe = make_recipe(cfg, mesh, attn_mode="sp_ring")
+
+        def fwd(p, x, _r=recipe, _db=db):
+            with use_recipe(_r):
+                o, _ = attn.gqa_attention(p, x, n_heads=n_heads, n_kv=n_kv,
+                                          head_dim=head_dim, sp_ring_double_buffer=_db)
+            return o
+
+        with mesh:
+            compiled = jax.jit(fwd).lower(params, x).compile()
+        st = hlo_walk.analyze(compiled.as_text())
+        # R-1 ring steps x (K, V) rotations
+        out[variant] = {
+            "collectives": len(st.collectives),
+            "overlapped": st.collectives_overlapped(),
+            "serialized": st.collectives_serialized(),
+            "exposed_bytes": st.exposed_collective_bytes(),
+            "overlap_by_kind": st.overlap_by_kind(),
+            "expected_ring_transfers": 2 * (grid[1] - 1),
         }
     if verbose:
         print(json.dumps(out, indent=1))
@@ -248,22 +321,34 @@ def main() -> None:
     ap.add_argument("--shape", default=None, choices=list(SHAPES))
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--attn-mode", default="auto", choices=["auto", "tp", "sp"])
+    ap.add_argument("--attn-mode", default="auto", choices=["auto", "tp", "sp", "sp_ring"])
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--set", action="append", default=[], help="cfg override k=v")
     ap.add_argument("--out", default="benchmarks/results")
     ap.add_argument("--tag", default="baseline")
     ap.add_argument("--summa-gemm", action="store_true",
                     help="dry-run the SUMMA ring program and report the "
-                         "collective-permute overlap classification")
+                         "kind-generic collective overlap classification")
     ap.add_argument("--summa-dims", default="256,256,256", help="ni,nj,nk for --summa-gemm")
     ap.add_argument("--summa-grid", default="2x4", help="rows x cols for --summa-gemm")
+    ap.add_argument("--sp-ring", action="store_true",
+                    help="dry-run the sp ring-attention trace and gate on 0 "
+                         "serialized collectives of any kind")
+    ap.add_argument("--sp-ring-seq", type=int, default=256, help="seq len for --sp-ring")
+    ap.add_argument("--sp-ring-grid", default="2x4", help="data x model for --sp-ring")
     args = ap.parse_args()
 
     if args.summa_gemm:
         ni, nj, nk = (int(x) for x in args.summa_dims.split(","))
         grid = tuple(int(x) for x in args.summa_grid.split("x"))
         rep = summa_dryrun(ni=ni, nj=nj, nk=nk, grid=grid)
+        bad = sum(rep[v]["collectives_serialized_any_kind"]
+                  for v in ("double_buffered", "blocking"))
+        raise SystemExit(1 if bad else 0)
+
+    if args.sp_ring:
+        grid = tuple(int(x) for x in args.sp_ring_grid.split("x"))
+        rep = sp_ring_dryrun(seq=args.sp_ring_seq, grid=grid)
         bad = sum(rep[v]["serialized"] for v in ("double_buffered", "blocking"))
         raise SystemExit(1 if bad else 0)
 

@@ -16,20 +16,33 @@ op costs by the product of enclosing trip counts.  It produces:
                            reduce-scatter / all-to-all / collective-permute,
                            loop-multiplied (factors: all-reduce x2 for the
                            reduce+broadcast phases, others x1);
-  * ``permutes``         — an overlap classification of every
-                           ``collective-permute``: *overlapped* when the
-                           transfer is off the def-use chain between compute
-                           ops, *serialized* when a compute op (``dot``, a
-                           fusion containing one, a kernel custom-call) feeds
-                           the transfer AND the transfer feeds a later
-                           compute op — i.e. the transfer sits on the
-                           critical path between consecutive GEMMs (inside a
+  * ``collectives``      — an overlap classification of every collective of
+                           *every* kind (all-gather, all-reduce,
+                           reduce-scatter, all-to-all, collective-permute):
+                           *overlapped* when the scheduler can hide the
+                           transfer, *serialized* when it sits on the
+                           critical path.  A collective is serialized iff a
+                           compute op (``dot``, a fusion containing one, a
+                           kernel custom-call) feeds it AND it feeds a later
+                           compute op AND no compute op is *independent* of
+                           it (neither upstream nor downstream in the
+                           def-use graph).  The independence clause is what
+                           makes the rule kind- and producer-generic: a
+                           double-buffered ring transfer whose payload was
+                           *produced* by an earlier projection GEMM still
+                           overlaps, because the step's local compute — a
+                           sibling branch, not an ancestor or descendant —
+                           is available to hide it; a pipeline transfer
+                           shipping one dot's output to the next dot has no
+                           such sibling and stays serialized.  Inside a
                            ``while`` body the loop-carried root->parameter
                            edges count, so a transfer feeding next
-                           iteration's dot is on the chain).  This is the
+                           iteration's dot is on the chain.  This is the
                            static proof of comm/compute overlap for the
-                           double-buffered SUMMA ring: a transfer the
-                           scheduler *can* hide has no compute upstream.
+                           double-buffered SUMMA and ring-attention rings.
+
+``permutes`` / ``permute_overlap_fraction`` survive as thin deprecation
+shims over the kind-generic fields (PR 2 callers keep working unchanged).
 
 Everything is static text analysis of the compiled artifact — the "profile"
 available without hardware (see EXPERIMENTS.md §Roofline).
@@ -40,7 +53,15 @@ import dataclasses
 import re
 from typing import Iterable
 
-__all__ = ["HloStats", "PermuteClass", "analyze", "classify_permutes", "top_contributors"]
+__all__ = [
+    "HloStats",
+    "CollectiveClass",
+    "PermuteClass",
+    "analyze",
+    "classify_collectives",
+    "classify_permutes",
+    "top_contributors",
+]
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -211,14 +232,25 @@ def _fusion_traffic(line: str, result_shape: str, comp: _Computation, comps: dic
 
 
 @dataclasses.dataclass
-class PermuteClass:
-    """One ``collective-permute``'s overlap verdict (see module docstring)."""
+class CollectiveClass:
+    """One collective's overlap verdict (see module docstring)."""
 
     computation: str
     var: str
     bytes: int
     mult: float
     classification: str  # 'overlapped' | 'serialized'
+    kind: str = "collective-permute"  # one of _COLLECTIVES
+    factor: int = 1  # per-kind byte factor (all-reduce x2), for exposed bytes
+
+    @property
+    def exposed_bytes(self) -> float:
+        """Loop-multiplied wire bytes this op leaves on the critical path."""
+        return self.bytes * self.mult * self.factor if self.classification == "serialized" else 0.0
+
+
+# deprecation shim: PR 2's permute-only verdict is the kind-generic one
+PermuteClass = CollectiveClass
 
 
 class _OverlapAnalyzer:
@@ -226,9 +258,13 @@ class _OverlapAnalyzer:
 
     A node is *compute* if it is a ``dot``, a fusion/call/while/conditional
     whose callee (transitively) contains a dot, or a kernel custom-call.  A
-    collective-permute is *serialized* iff some compute node reaches it AND
-    it reaches some compute node — it sits on the def-use chain between
-    compute ops; otherwise *overlapped* (the scheduler may hide it).  While
+    collective (any kind) is *serialized* iff some compute node reaches it
+    AND it reaches some compute node AND no compute node in the enclosing
+    computation is independent of it — every compute op is ordered with the
+    transfer, so the scheduler has nothing concurrent to hide it behind.
+    Otherwise *overlapped*: either an endpoint of the chain is free (the
+    transfer can be issued arbitrarily early / completed arbitrarily late)
+    or an independent sibling compute exists to run concurrently.  While
     bodies get loop-carried edges (ROOT tuple element k -> the parameter
     get-tuple-element with index k) so cross-iteration chains count.
     """
@@ -237,6 +273,7 @@ class _OverlapAnalyzer:
         self.comps = comps
         self._graphs: dict[str, tuple[dict, dict]] = {}
         self._ops_by_var: dict[str, dict] = {}
+        self._compute_sets: dict[str, set] = {}
         self._contains_dot: dict[str, bool] = {}
         self._while_bodies = {
             wm.group(2)
@@ -323,11 +360,26 @@ class _OverlapAnalyzer:
                 operands.setdefault(g, []).append(r)
                 users.setdefault(r, []).append(g)
 
-    def _reaches_compute(self, comp: _Computation, start: str, edges: dict) -> bool:
+    def _ops_map(self, comp: _Computation) -> dict:
         ops_by_var = self._ops_by_var.get(comp.name)
         if ops_by_var is None:
             ops_by_var = {var: (op, line) for var, _, op, line in comp.lines}
             self._ops_by_var[comp.name] = ops_by_var
+        return ops_by_var
+
+    def _compute_vars(self, comp: _Computation) -> set:
+        cached = self._compute_sets.get(comp.name)
+        if cached is None:
+            cached = {
+                var
+                for var, (op, line) in self._ops_map(comp).items()
+                if self.is_compute(op, line)
+            }
+            self._compute_sets[comp.name] = cached
+        return cached
+
+    def _reach(self, start: str, edges: dict) -> set:
+        """Transitive closure of ``start`` along ``edges`` (excl. start)."""
         seen = {start}
         frontier = list(edges.get(start, []))
         while frontier:
@@ -335,17 +387,23 @@ class _OverlapAnalyzer:
             if v in seen:
                 continue
             seen.add(v)
-            op, line = ops_by_var.get(v, ("", ""))
-            if self.is_compute(op, line):
-                return True
             frontier.extend(edges.get(v, []))
-        return False
+        seen.discard(start)
+        return seen
 
     def classify(self, comp: _Computation, var: str) -> str:
         operands, users = self._graph(comp)
-        upstream = self._reaches_compute(comp, var, operands)
-        downstream = self._reaches_compute(comp, var, users)
-        return "serialized" if (upstream and downstream) else "overlapped"
+        compute = self._compute_vars(comp)
+        upstream = self._reach(var, operands)
+        if not (upstream & compute):
+            return "overlapped"  # issue point unconstrained by compute
+        downstream = self._reach(var, users)
+        if not (downstream & compute):
+            return "overlapped"  # nothing waits on it
+        # on a compute->transfer->compute chain: hideable only behind compute
+        # that is ordered with neither side (a concurrent sibling branch)
+        independent = compute - upstream - downstream - {var}
+        return "overlapped" if independent else "serialized"
 
 
 @dataclasses.dataclass
@@ -356,26 +414,66 @@ class HloStats:
     coll_by_op: dict = dataclasses.field(default_factory=dict)
     dot_flops_by_mult: dict = dataclasses.field(default_factory=dict)
     loop_trip_counts: list = dataclasses.field(default_factory=list)
-    permutes: list = dataclasses.field(default_factory=list)  # list[PermuteClass]
+    collectives: list = dataclasses.field(default_factory=list)  # list[CollectiveClass]
+
+    # ---- kind-generic overlap accounting -------------------------------------
+    def of_kind(self, kind: str | None = None) -> list:
+        return self.collectives if kind is None else [c for c in self.collectives if c.kind == kind]
+
+    def collectives_overlapped(self, kind: str | None = None) -> int:
+        return sum(1 for c in self.of_kind(kind) if c.classification == "overlapped")
+
+    def collectives_serialized(self, kind: str | None = None) -> int:
+        return sum(1 for c in self.of_kind(kind) if c.classification == "serialized")
+
+    def exposed_collective_bytes(self, kind: str | None = None) -> float:
+        """Loop-multiplied, factor-weighted bytes of the *serialized*
+        collectives — the traffic the scheduler cannot hide, i.e. the wire
+        time that stays exposed in the modeled step."""
+        return sum(c.exposed_bytes for c in self.of_kind(kind))
+
+    def overlap_fraction(self, kind: str | None = None) -> float | None:
+        """Byte-weighted (loop-multiplied) fraction of collective traffic of
+        ``kind`` (all kinds when None) that is off the compute def-use chain;
+        None if the program has no such collectives."""
+        cs = self.of_kind(kind)
+        total = sum(c.bytes * c.mult * c.factor for c in cs)
+        if not total:
+            return None
+        good = sum(c.bytes * c.mult * c.factor for c in cs if c.classification == "overlapped")
+        return good / total
+
+    def overlap_by_kind(self) -> dict:
+        """Per-kind table: {kind: {overlapped, serialized, total_bytes,
+        exposed_bytes, overlap_fraction}} — the benchmark/CI artifact rows."""
+        out: dict = {}
+        for kind in sorted({c.kind for c in self.collectives}):
+            out[kind] = {
+                "overlapped": self.collectives_overlapped(kind),
+                "serialized": self.collectives_serialized(kind),
+                "total_bytes": sum(c.bytes * c.mult * c.factor for c in self.of_kind(kind)),
+                "exposed_bytes": self.exposed_collective_bytes(kind),
+                "overlap_fraction": self.overlap_fraction(kind),
+            }
+        return out
+
+    # ---- deprecation shims (PR 2 permute-only API) ---------------------------
+    @property
+    def permutes(self) -> list:
+        """PR 2 shim: the collective-permute subset of ``collectives``."""
+        return self.of_kind("collective-permute")
 
     @property
     def permutes_overlapped(self) -> int:
-        return sum(1 for p in self.permutes if p.classification == "overlapped")
+        return self.collectives_overlapped("collective-permute")
 
     @property
     def permutes_serialized(self) -> int:
-        return sum(1 for p in self.permutes if p.classification == "serialized")
+        return self.collectives_serialized("collective-permute")
 
     @property
     def permute_overlap_fraction(self) -> float | None:
-        """Byte-weighted (loop-multiplied) fraction of collective-permute
-        traffic that is off the compute def-use chain; None if the program
-        has no collective-permutes."""
-        total = sum(p.bytes * p.mult for p in self.permutes)
-        if not total:
-            return None
-        good = sum(p.bytes * p.mult for p in self.permutes if p.classification == "overlapped")
-        return good / total
+        return self.overlap_fraction("collective-permute")
 
 
 def analyze(hlo_text: str) -> HloStats:
@@ -442,11 +540,11 @@ def analyze(hlo_text: str) -> HloStats:
                     factor = 2 if coll == "all-reduce" else 1
                     stats.collective_bytes += mult * cb * factor
                     stats.coll_by_op[coll] = stats.coll_by_op.get(coll, 0.0) + mult * cb * factor
-                    if coll == "collective-permute":
-                        stats.permutes.append(PermuteClass(
-                            computation=name, var=var, bytes=cb, mult=mult,
-                            classification=overlap.classify(comp, var),
-                        ))
+                    stats.collectives.append(CollectiveClass(
+                        computation=name, var=var, bytes=cb, mult=mult,
+                        classification=overlap.classify(comp, var),
+                        kind=coll, factor=factor,
+                    ))
                     break
                 if op == coll + "-start":
                     break  # counted at -done
@@ -473,22 +571,35 @@ def analyze(hlo_text: str) -> HloStats:
     return stats
 
 
-def classify_permutes(hlo_text: str) -> list[PermuteClass]:
-    """Standalone overlap classification of every ``collective-permute`` in
-    the module (all computations, no loop multipliers) — the quick check for
-    'did the double-buffered rewrite actually take the transfers off the
-    critical path?'."""
+def classify_collectives(
+    hlo_text: str, kinds: Iterable[str] | None = None
+) -> list[CollectiveClass]:
+    """Standalone overlap classification of every collective in the module
+    (all computations, no loop multipliers) — the quick check for 'did the
+    double-buffered rewrite actually take the transfers off the critical
+    path?'.  ``kinds`` restricts to a subset of collective kinds (default:
+    all five)."""
+    wanted = tuple(kinds) if kinds is not None else _COLLECTIVES
     comps = _split_computations(hlo_text)
     overlap = _OverlapAnalyzer(comps)
-    out: list[PermuteClass] = []
+    out: list[CollectiveClass] = []
     for comp in comps.values():
         for var, shape, op, _ in comp.lines:
-            if op in ("collective-permute", "collective-permute-done"):
-                out.append(PermuteClass(
-                    computation=comp.name, var=var, bytes=_tensor_bytes(shape),
-                    mult=1.0, classification=overlap.classify(comp, var),
-                ))
+            for coll in wanted:
+                if op in (coll, coll + "-done"):
+                    out.append(CollectiveClass(
+                        computation=comp.name, var=var, bytes=_tensor_bytes(shape),
+                        mult=1.0, classification=overlap.classify(comp, var),
+                        kind=coll, factor=2 if coll == "all-reduce" else 1,
+                    ))
+                    break
     return out
+
+
+def classify_permutes(hlo_text: str) -> list[CollectiveClass]:
+    """PR 2 shim: :func:`classify_collectives` restricted to
+    ``collective-permute``."""
+    return classify_collectives(hlo_text, kinds=("collective-permute",))
 
 
 def top_contributors(hlo_text: str, k: int = 15) -> dict:

@@ -6,6 +6,18 @@ Three terms per (arch x shape x mesh), in seconds:
     memory     = HLO_bytes  / (chips * HBM_bw)
     collective = coll_bytes / (chips * link_bw)
 
+plus the *exposed* collective term, which discounts traffic the
+``hlo_walk`` def-use classifier statically proves overlappable (like the
+other ``hlo_walk``-derived terms below, its bytes are already per-device,
+so no chips divisor appears in the code):
+
+    collective_exposed = serialized_coll_bytes / link_bw
+
+The modeled step (``roofline_fraction``) charges only the exposed term —
+a double-buffered ring whose transfers all classify overlapped pays zero
+collective time, a pipeline that ships GEMM outputs rank-to-rank pays
+full wire time.
+
 HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (whole-program,
 already divided across devices by SPMD partitioning — the CPU backend
 reports per-partition module costs; see note below).  Collective bytes are
@@ -103,17 +115,31 @@ class RooflineResult:
     t_memory: float
     t_collective: float
     # static comm/compute-overlap evidence (hlo_walk def-use classification):
-    # collective-permutes off the compute chain can be hidden by the scheduler
+    # collectives off the compute chain can be hidden by the scheduler.  The
+    # kind-generic fields cover every collective kind; the permute_* triple
+    # survives as the PR-2 deprecation shim (collective-permute only).
     permutes_overlapped: int = 0
     permutes_serialized: int = 0
     permute_overlap_fraction: float | None = None
+    collectives_overlapped: int = 0
+    collectives_serialized: int = 0
+    collective_overlap_fraction: float | None = None
+    # serialized (non-hideable) collective bytes and their wire time: the
+    # exposed collective term after discounting statically-proven overlap
+    coll_exposed_bytes: float = 0.0
+    t_collective_exposed: float = 0.0
+    coll_overlap_by_kind: dict = dataclasses.field(default_factory=dict)
 
     @property
     def dominant(self) -> str:
+        """The binding term of the modeled step — charging the collective
+        term at its *exposed* time, consistently with ``roofline_fraction``
+        (a program whose collectives are all statically proven hideable is
+        never collective-bound)."""
         terms = {
             "compute": self.t_compute,
             "memory": self.t_memory,
-            "collective": self.t_collective,
+            "collective": self.t_collective_exposed,
         }
         return max(terms, key=terms.get)
 
@@ -130,9 +156,12 @@ class RooflineResult:
 
         Ideal = MODEL_FLOPS spread over all chips at peak.  Modeled step
         time = max of the three terms (perfect overlap assumption — the
-        optimistic roofline convention).  1.0 = the hardware ceiling."""
+        optimistic roofline convention), with the collective term *discounted*
+        to its exposed time: collectives the def-use classifier proves
+        hideable cost nothing, only serialized bytes keep wire time
+        (``t_collective_exposed``).  1.0 = the hardware ceiling."""
         t_ideal = (self.model_flops / self.chips) / HW["peak_flops"]
-        t_actual = max(self.t_compute, self.t_memory, self.t_collective)
+        t_actual = max(self.t_compute, self.t_memory, self.t_collective_exposed)
         return t_ideal / t_actual if t_actual else float("nan")
 
     def to_json(self) -> dict:
@@ -153,6 +182,7 @@ def roofline_report(*, arch: str, shape: str, mesh_name: str, chips: int,
     from . import hlo_walk
 
     st = hlo_walk.analyze(hlo_text)
+    exposed = st.exposed_collective_bytes()
     return RooflineResult(
         arch=arch,
         shape=shape,
@@ -169,4 +199,10 @@ def roofline_report(*, arch: str, shape: str, mesh_name: str, chips: int,
         permutes_overlapped=st.permutes_overlapped,
         permutes_serialized=st.permutes_serialized,
         permute_overlap_fraction=st.permute_overlap_fraction,
+        collectives_overlapped=st.collectives_overlapped(),
+        collectives_serialized=st.collectives_serialized(),
+        collective_overlap_fraction=st.overlap_fraction(),
+        coll_exposed_bytes=exposed,
+        t_collective_exposed=exposed / HW["link_bw"],
+        coll_overlap_by_kind=st.overlap_by_kind(),
     )

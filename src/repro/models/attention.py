@@ -2,7 +2,12 @@
 
 Two execution modes per op:
   * ``seq`` (train / prefill): blockwise flash attention — Pallas on TPU,
-    pure-jnp online-softmax scan elsewhere (identical math).
+    pure-jnp online-softmax scan elsewhere (identical math).  Under a
+    sequence-parallel ``sp_ring`` recipe this becomes
+    :func:`ring_attention_seq`: the KV blocks rotate around the ``model``
+    mesh axis with the non-blocking ``shard_ring_shift_start`` issued
+    *before* each step's local attention (double-buffered, exactly like the
+    SUMMA ring), so the transfer overlaps the step's math.
   * ``decode``: single new token against a KV cache — dense streaming
     attention.  With the cache's seq dim sharded over the ``model`` mesh
     axis, XLA turns the softmax reductions into the cross-device
@@ -19,9 +24,11 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.compat import shard_map
+from repro.core.p2p import shard_ring_shift, shard_ring_shift_start
 from repro.kernels import ops
 from .module import pspec
-from .sharding import shard_act
+from .sharding import _fit_spec, current_recipe, shard_act
 
 # ------------------------------------------------------------------ RoPE ----
 
@@ -79,6 +86,110 @@ def attention_seq(q, k, v, *, causal: bool = True, impl: str | None = None, bloc
     return ops.flash_attention(q, k, v, causal=causal, impl=impl, bq=block, bk=block, mixed=mixed)
 
 
+# ------------------------------------------------------- ring attention ----
+
+def _ring_attention_local(q, k, v, *, axis_name: str, causal: bool, double_buffer: bool):
+    """Per-device body of the sequence-parallel attention ring.
+
+    ``q`` (B,H,Sl,D) and ``k``/``v`` (B,G,Sl,D) are the *local* seq chunks of
+    rank ``r`` on the ``axis_name`` ring (R ranks, global S = R*Sl, chunks
+    contiguous in rank order).  Each of R steps computes blockwise
+    online-softmax attention of the resident Q chunk against the currently
+    held KV block, exactly the flash-attention merge but with the block axis
+    unrolled over *devices* instead of VMEM tiles; meanwhile the next KV
+    block is already in flight — ``shard_ring_shift_start`` (the
+    ``MPI_Isend``/``Irecv`` analogue) is issued *before* the step's local
+    attention and completed with ``Pending.wait`` after it, exactly like the
+    double-buffered SUMMA ring issues its panel rotation before the local
+    GEMM.  ``double_buffer=False`` keeps the blocking formulation (compute,
+    then rotate) — numerically bit-identical, the reference variant.
+    """
+    R = jax.lax.psum(1, axis_name)  # static ring size
+    me = jax.lax.axis_index(axis_name)
+    B, Hq, Sl, D = q.shape
+    G = k.shape[1]
+    rep = Hq // G
+    scale = D ** -0.5
+    qg = q.reshape(B, G, rep, Sl, D)
+    q_pos = me * Sl + jnp.arange(Sl)
+
+    # online-softmax accumulators, f32 like the flash kernel
+    o = jnp.zeros((B, G, rep, Sl, D), jnp.float32)
+    m = jnp.full((B, G, rep, Sl), -1e30, jnp.float32)
+    l = jnp.zeros((B, G, rep, Sl), jnp.float32)
+
+    kv = (k, v)
+    for s in range(R):
+        pend = None
+        if double_buffer and s < R - 1:
+            # issue step s's rotation before the local attention: the
+            # transfer has no data dependence on this step's math
+            pend = shard_ring_shift_start(kv, axis_name, 1)
+        kb, vb = kv
+        # after s hops of +1, rank r holds the KV block of rank (r - s) % R
+        k_pos = ((me - s) % R) * Sl + jnp.arange(Sl)
+        sc = jnp.einsum("bgrqd,bgkd->bgrqk", qg, kb,
+                        preferred_element_type=jnp.float32) * scale
+        if causal:
+            sc = jnp.where((q_pos[:, None] >= k_pos[None, :])[None, None, None], sc, -1e30)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        o = o * corr[..., None] + jnp.einsum(
+            "bgrqk,bgkd->bgrqd", p, vb.astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        m = m_new
+        if s < R - 1:
+            kv = pend.wait() if double_buffer else shard_ring_shift(kv, axis_name, 1)
+    return (o / l[..., None]).reshape(B, Hq, Sl, D).astype(q.dtype)
+
+
+def ring_attention_seq(q, k, v, *, mesh, axis_name: str = "model", q_spec=None,
+                       kv_spec=None, causal: bool = True, double_buffer: bool = True):
+    """Sequence-parallel ring attention over the ``axis_name`` mesh axis.
+
+    The distributed twin of :func:`attention_seq`: q (B,H,S,D) and k/v
+    (B,G,S,D) with the seq dim sharded over ``axis_name`` in contiguous
+    rank-order chunks; per step each rank moves only its (B,G,S/R,D) KV
+    block instead of all-gathering O(S) K/V up front, and the rotation
+    overlaps the local math (see :func:`_ring_attention_local`).  ``q_spec``
+    / ``kv_spec`` default to seq-sharded-over-``axis_name`` with everything
+    else replicated; pass the recipe's specs to keep batch dims sharded.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    R = mesh.shape[axis_name]
+    if q.shape[2] % R or k.shape[2] % R:
+        raise ValueError(f"ring attention needs seq {q.shape[2]} divisible by "
+                         f"mesh axis {axis_name!r} (size {R})")
+    if q_spec is None:
+        q_spec = P(None, None, axis_name, None)
+    if kv_spec is None:
+        kv_spec = P(None, None, axis_name, None)
+    q_spec = _fit_spec(q_spec, tuple(q.shape), mesh)
+    kv_spec = _fit_spec(kv_spec, tuple(k.shape), mesh)
+
+    def body(ql, kl, vl):
+        return _ring_attention_local(ql, kl, vl, axis_name=axis_name,
+                                     causal=causal, double_buffer=double_buffer)
+
+    return shard_map(body, mesh=mesh, in_specs=(q_spec, kv_spec, kv_spec),
+                     out_specs=q_spec)(q, k, v)
+
+
+def _ring_applicable(recipe, q, k) -> bool:
+    """The sp ring runs when the recipe asks for it and the shapes ring:
+    a >1-sized model axis whose size divides the seq dim."""
+    if recipe is None or not getattr(recipe, "sp_ring", False) or recipe.attn_mode != "sp":
+        return False
+    if "model" not in recipe.mesh.shape:
+        return False
+    R = recipe.mesh.shape["model"]
+    S = q.shape[2]
+    return R > 1 and S % R == 0 and k.shape[2] == S and q.shape[1] % k.shape[1] == 0
+
+
 def attention_decode(q, k_cache, v_cache, cache_len):
     """q (B,H,1,D); caches (B,G,S,D); positions >= cache_len are masked.
 
@@ -116,8 +227,14 @@ class KVCache(NamedTuple):
 
 def gqa_attention(p, x, *, n_heads: int, n_kv: int, head_dim: int, rope_theta: float = 10000.0,
                   positions=None, cache: KVCache | None = None, causal: bool = True,
-                  attn_impl: str | None = None, block: int = 512, attn_mixed: bool | None = None):
-    """x (B,S,m) -> (B,S,m).  ``cache`` switches to decode mode (S==1)."""
+                  attn_impl: str | None = None, block: int = 512, attn_mixed: bool | None = None,
+                  sp_ring_double_buffer: bool = True):
+    """x (B,S,m) -> (B,S,m).  ``cache`` switches to decode mode (S==1).
+
+    Under an active ``sp_ring`` recipe the seq path runs
+    :func:`ring_attention_seq` (double-buffered KV rotation over the
+    ``model`` axis; ``sp_ring_double_buffer=False`` selects the blocking
+    reference variant, bit-identical at f32)."""
     B, S, _ = x.shape
     q = shard_act(jnp.einsum("bsm,mhd->bhsd", x, p["wq"].astype(x.dtype)), "q")
     k = shard_act(jnp.einsum("bsm,mgd->bgsd", x, p["wk"].astype(x.dtype)), "kv")
@@ -138,7 +255,16 @@ def gqa_attention(p, x, *, n_heads: int, n_kv: int, head_dim: int, rope_theta: f
         o = attention_decode(q, kc, vc, cache.length + S)
         out = jnp.einsum("bhsd,hdm->bsm", o, p["wo"].astype(x.dtype))
         return shard_act(out, "hidden"), new_cache
-    o = shard_act(attention_seq(q, k, v, causal=causal, impl=attn_impl, block=block, mixed=attn_mixed), "attn_out")
+    recipe = current_recipe()
+    if _ring_applicable(recipe, q, k):
+        o = ring_attention_seq(
+            q, k, v, mesh=recipe.mesh, axis_name="model",
+            q_spec=recipe.spec("q"), kv_spec=recipe.spec("kv"),
+            causal=causal, double_buffer=sp_ring_double_buffer,
+        )
+        o = shard_act(o, "attn_out")
+    else:
+        o = shard_act(attention_seq(q, k, v, causal=causal, impl=attn_impl, block=block, mixed=attn_mixed), "attn_out")
     return shard_act(jnp.einsum("bhsd,hdm->bsm", o, p["wo"].astype(x.dtype)), "hidden"), None
 
 

@@ -12,6 +12,27 @@ Two attention modes:
   * ``sp``: sequence sharded over ``model`` for attention (any head count),
     Megatron-SP-style boundary reshards handled by GSPMD.
 
+The ring-attention recipe (``attn_mode="sp_ring"``)
+---------------------------------------------------
+``sp`` leaves K/V replicated over ``model`` and lets GSPMD insert the
+boundary all-gather — O(S) K/V bytes on every rank before any math runs.
+``sp_ring`` is the sequence-parallel mode with *explicit, overlapped*
+communication: Q, K and V all shard their sequence dim over ``model``
+(``kv`` spec becomes seq-sharded), and attention runs as a
+``model``-axis ring — each of R steps computes blockwise online-softmax
+attention of the local Q chunk against the currently-held KV block while
+the *next* KV block is already in flight, rotated with the non-blocking
+``shard_ring_shift_start`` (``MPI_Isend``/``Irecv``) issued *before* the
+step's local attention and completed with ``Pending.wait`` after it —
+double-buffered exactly like the SUMMA ring in
+``examples/distributed_gemm.py``.  Per step a rank moves only the
+(B, G, S/R, D) block, and the compiled trace provably keeps every
+rotation off the compute def-use chain (0 serialized collectives:
+``python -m repro.launch.dryrun --sp-ring``).  Recipe-wise it is plain
+``sp`` plus ``Recipe.sp_ring=True``; use it when S is long enough that
+the all-gather dominates (S/R per-step blocks amortize behind the local
+attention math) and S % model == 0.
+
 Activation constraints are applied through a context (``use_recipe``) so
 model code stays mesh-free; ``shard_act(x, kind)`` is a no-op outside it.
 """
@@ -37,6 +58,9 @@ class Recipe:
     act_specs: dict[str, P]  # activation kind -> PartitionSpec
     attn_mode: str  # 'tp' | 'sp'
     batch_axes: tuple[str, ...]
+    # sp only: rotate seq-sharded KV blocks through the explicit
+    # double-buffered model-axis ring instead of GSPMD's boundary all-gather
+    sp_ring: bool = False
 
     def param_shardings(self, spec_tree):
         from .module import param_shardings
@@ -73,6 +97,9 @@ def make_recipe(cfg, mesh: Mesh, *, attn_mode: str = "auto",
     B = batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None)
     msize = mesh.shape[model_ax] if model_ax else 1
 
+    sp_ring = attn_mode == "sp_ring"
+    if sp_ring:
+        attn_mode = "sp"  # the ring is an sp sub-mode: same specs except kv
     if attn_mode == "auto":
         attn_mode = "tp" if (model_ax and cfg.n_heads % msize == 0) else "sp"
 
@@ -114,7 +141,10 @@ def make_recipe(cfg, mesh: Mesh, *, attn_mode: str = "auto",
         "logits": P(B, None, mp),
         # attention internals (b, h|g, s, d)
         "q": P(B, mp, None, None) if (not sp and h_div) else P(B, None, mp if sp else None, None),
-        "kv": P(B, mp, None, None) if (not sp and g_div) else P(B, None, None, None),
+        # sp_ring: K/V shard their seq dim too (the ring rotates the blocks);
+        # plain sp leaves them replicated and GSPMD all-gathers at the boundary
+        "kv": P(B, mp, None, None) if (not sp and g_div) else (
+            P(B, None, mp, None) if sp_ring else P(B, None, None, None)),
         "attn_out": P(B, mp, None, None) if (not sp and h_div) else P(B, None, mp if sp else None, None),
         # ffn hidden (b, s, f)
         "ffn_h": P(B, None, mp if (cfg.d_ff % max(msize, 1) == 0) else None),
@@ -138,8 +168,16 @@ def make_recipe(cfg, mesh: Mesh, *, attn_mode: str = "auto",
         H = d_inner // cfg.ssm_head_dim
         if H % msize:
             act["state_mamba"] = P(B, None, mp, None)
+    if sp and sp_ring:
+        # pure sequence parallelism: the residual stream and the FFN hidden
+        # stay seq-sharded over ``model`` between blocks, so the only
+        # cross-rank traffic in a layer is the attention ring itself (no
+        # boundary all-gather around the projections)
+        act["hidden"] = P(B, mp, None)
+        act["ffn_h"] = P(B, mp, None)
     act.update(act_overrides or {})
-    return Recipe(mesh=mesh, bindings=bind, act_specs=act, attn_mode=attn_mode, batch_axes=batch_axes)
+    return Recipe(mesh=mesh, bindings=bind, act_specs=act, attn_mode=attn_mode,
+                  batch_axes=batch_axes, sp_ring=sp_ring)
 
 
 # --------------------------------------------------- input/state shardings ----

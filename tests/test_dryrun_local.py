@@ -82,6 +82,11 @@ assert st.coll_by_op["collective-permute"] == model["ring_bytes"], (
     st.coll_by_op, model)
 assert model["ring_bytes"] == (R - 1) * (16 // Cc) * (16 // R) * 4
 assert st.collective_bytes >= model["ring_bytes"]  # + reduce-scatter epilogue
+# kind-generic: the reduce-scatter epilogue is terminal (no downstream
+# compute) -> 0 serialized collectives of ANY kind, 0 exposed bytes
+assert st.collectives_serialized() == 0, st.collectives
+assert st.exposed_collective_bytes() == 0.0
+assert set(st.overlap_by_kind()) >= {"collective-permute", "reduce-scatter"}
 
 # numerics: double-buffered == blocking, bit for bit at f32
 C_db, ref = run_summa_gemm(ni=16, nj=16, nk=16, grid=(R, Cc), majors="J/K/J",
@@ -220,6 +225,113 @@ ENTRY %main (p0: f32[8,8]) -> f32[8,8] {
 """
     by_var = {p.var: p.classification for p in hlo_walk.classify_permutes(hlo_while)}
     assert by_var == {"%cp.w": "serialized"}, by_var
+
+
+def test_collective_classification_kind_generic_hand_built_hlo():
+    """Kind-generic classifier unit tests on hand-written HLO:
+
+    * an all-gather on a dot->dot chain with no sibling compute is
+      serialized, exactly like a permute there (the kind doesn't matter);
+    * the *independence clause*: the same chain plus a compute op ordered
+      with neither side (a sibling branch the scheduler can hide the
+      transfer behind — the double-buffered-ring shape) flips the verdict
+      to overlapped;
+    * per-kind stats: bytes factors (all-reduce x2), exposed bytes, and the
+      permute-only deprecation shims filter correctly.
+    """
+    import sys, os
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.launch import hlo_walk
+
+    # all-gather between two dots, nothing else: serialized (any kind)
+    hlo_chain = """HloModule chain
+
+ENTRY %main (p0: f32[8,8], p1: f32[8,8]) -> f32[8,8] {
+  %p0 = f32[8,8]{1,0} parameter(0)
+  %p1 = f32[8,8]{1,0} parameter(1)
+  %dot.1 = f32[8,8]{1,0} dot(f32[8,8]{1,0} %p0, f32[8,8]{1,0} %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag.1 = f32[8,8]{1,0} all-gather(f32[8,8]{1,0} %dot.1), dimensions={0}
+  ROOT %dot.2 = f32[8,8]{1,0} dot(f32[8,8]{1,0} %ag.1, f32[8,8]{1,0} %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    cs = hlo_walk.classify_collectives(hlo_chain)
+    assert [(c.kind, c.classification) for c in cs] == [("all-gather", "serialized")], cs
+
+    # same chain + an independent sibling dot: the transfer is hideable
+    hlo_sibling = """HloModule sibling
+
+ENTRY %main (p0: f32[8,8], p1: f32[8,8]) -> f32[8,8] {
+  %p0 = f32[8,8]{1,0} parameter(0)
+  %p1 = f32[8,8]{1,0} parameter(1)
+  %dot.1 = f32[8,8]{1,0} dot(f32[8,8]{1,0} %p0, f32[8,8]{1,0} %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %cp.1 = f32[8,8]{1,0} collective-permute(f32[8,8]{1,0} %dot.1), source_target_pairs={{0,1},{1,0}}
+  %dot.2 = f32[8,8]{1,0} dot(f32[8,8]{1,0} %cp.1, f32[8,8]{1,0} %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %dot.3 = f32[8,8]{1,0} dot(f32[8,8]{1,0} %dot.1, f32[8,8]{1,0} %p0), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %add.1 = f32[8,8]{1,0} add(f32[8,8]{1,0} %dot.2, f32[8,8]{1,0} %dot.3)
+}
+"""
+    cs = hlo_walk.classify_collectives(hlo_sibling)
+    assert [(c.kind, c.classification) for c in cs] == [
+        ("collective-permute", "overlapped")
+    ], cs
+
+    # per-kind stats + shims on a mixed-kind module
+    hlo_mixed = """HloModule mixed
+
+ENTRY %main (p0: f32[8,8], p1: f32[8,8]) -> f32[8,8] {
+  %p0 = f32[8,8]{1,0} parameter(0)
+  %p1 = f32[8,8]{1,0} parameter(1)
+  %dot.1 = f32[8,8]{1,0} dot(f32[8,8]{1,0} %p0, f32[8,8]{1,0} %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar.1 = f32[8,8]{1,0} all-reduce(f32[8,8]{1,0} %dot.1), to_apply=%sum
+  %dot.2 = f32[8,8]{1,0} dot(f32[8,8]{1,0} %ar.1, f32[8,8]{1,0} %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %cp.1 = f32[8,8]{1,0} collective-permute(f32[8,8]{1,0} %p1), source_target_pairs={{0,1},{1,0}}
+  ROOT %add.1 = f32[8,8]{1,0} add(f32[8,8]{1,0} %dot.2, f32[8,8]{1,0} %cp.1)
+}
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(f32[] %a, f32[] %b)
+}
+"""
+    st = hlo_walk.analyze(hlo_mixed)
+    tb = 8 * 8 * 4
+    # the gradient-style all-reduce sits between two dots with no sibling
+    assert st.collectives_serialized() == 1 and st.collectives_overlapped() == 1
+    assert st.exposed_collective_bytes() == 2 * tb  # all-reduce factor x2
+    by_kind = st.overlap_by_kind()
+    assert by_kind["all-reduce"]["serialized"] == 1
+    assert by_kind["all-reduce"]["exposed_bytes"] == 2 * tb
+    assert by_kind["collective-permute"]["overlapped"] == 1
+    assert by_kind["collective-permute"]["exposed_bytes"] == 0.0
+    # byte-weighted: cp tb overlapped of (cp tb + ar 2tb) total
+    assert abs(st.overlap_fraction() - 1.0 / 3.0) < 1e-12
+    # permute-only deprecation shims see only the permute
+    assert len(st.permutes) == 1 and st.permutes[0].kind == "collective-permute"
+    assert st.permutes_overlapped == 1 and st.permutes_serialized == 0
+    assert st.permute_overlap_fraction == 1.0
+
+
+def test_roofline_dominant_consistent_with_exposed_discount():
+    """A cell whose collectives are all statically proven hideable must not
+    report dominant='collective': ``dominant`` ranks the same discounted
+    collective term that ``roofline_fraction`` charges."""
+    import sys, os
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.launch.roofline import HW, RooflineResult
+
+    kw = dict(arch="a", shape="s", mesh="m", chips=8, hlo_flops=1e12,
+              hlo_bytes=1e9, coll_bytes=1e12, coll_by_op={}, model_flops=1e12,
+              t_compute=1e12 / HW["peak_flops"], t_memory=1e9 / HW["hbm_bw"],
+              t_collective=1e12 / HW["link_bw"])
+    overlapped = RooflineResult(**kw, coll_exposed_bytes=0.0, t_collective_exposed=0.0)
+    assert overlapped.t_collective > overlapped.t_compute  # raw term dominates...
+    assert overlapped.dominant == "compute"  # ...but exposes nothing
+    serialized = RooflineResult(**kw, coll_exposed_bytes=1e12,
+                                t_collective_exposed=1e12 / HW["link_bw"])
+    assert serialized.dominant == "collective"
+    js = overlapped.to_json()
+    assert js["t_collective_exposed"] == 0.0 and js["dominant"] == "compute"
 
 
 def test_hlo_walker_loop_multiplication():

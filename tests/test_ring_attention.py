@@ -1,0 +1,119 @@
+"""Sequence-parallel ring attention (the model stack's double-buffered ring).
+
+Three layers of evidence, mirroring the SUMMA acceptance tests:
+
+  * numerics — the ring (both variants) matches the single-device flash
+    reference, and the double-buffered and blocking variants are
+    bit-identical at f32 (only the request issue point differs, never the
+    math);
+  * model integration — ``gqa_attention`` under an ``sp_ring`` recipe
+    matches the same op with no recipe at all;
+  * static overlap proof — the compiled sp-ring trace contains exactly
+    2*(R-1) ring ``collective-permute``s (K and V per step) and 0 serialized
+    collectives of ANY kind under the kind-generic classifier, even though
+    the rotated payloads are *produced* by the projection GEMMs.
+"""
+
+
+def test_ring_attention_matches_reference_and_variants_bitwise(distributed):
+    out = distributed(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.compat import make_mesh
+from repro.models import attention as attn
+
+mesh = make_mesh((2, 4), ('data', 'model'))
+rng = np.random.default_rng(3)
+B, H, G, S, D = 2, 4, 2, 32, 8
+q = jnp.asarray(rng.standard_normal((B, H, S, D)), jnp.float32)
+k = jnp.asarray(rng.standard_normal((B, G, S, D)), jnp.float32)
+v = jnp.asarray(rng.standard_normal((B, G, S, D)), jnp.float32)
+
+for causal in (True, False):
+    ref = attn.attention_seq(q, k, v, causal=causal, block=8)
+    db = attn.ring_attention_seq(q, k, v, mesh=mesh, causal=causal, double_buffer=True)
+    bl = attn.ring_attention_seq(q, k, v, mesh=mesh, causal=causal, double_buffer=False)
+    # MPI_Isend-before-compute vs compute-then-send: identical math
+    assert np.array_equal(np.asarray(db), np.asarray(bl)), causal
+    assert np.abs(np.asarray(db) - np.asarray(ref)).max() < 1e-5, causal
+
+# the train step differentiates through the ring: grads must match the
+# single-device reference
+g_ref = jax.grad(lambda q: attn.attention_seq(q, k, v, block=8).sum())(q)
+g_ring = jax.grad(lambda q: attn.ring_attention_seq(q, k, v, mesh=mesh).sum())(q)
+assert np.abs(np.asarray(g_ring) - np.asarray(g_ref)).max() < 1e-4
+
+# seq not divisible by the ring -> loud trace-time error
+try:
+    attn.ring_attention_seq(q[:, :, :30], k[:, :, :30], v[:, :, :30], mesh=mesh)
+    raise SystemExit('expected ValueError')
+except ValueError:
+    pass
+print('OK')
+"""
+    )
+    assert "OK" in out
+
+
+def test_gqa_attention_sp_ring_recipe_matches_no_recipe(distributed):
+    """The model path: the same params and inputs through ``gqa_attention``
+    with and without the sp_ring recipe must agree — the ring is a layout
+    decision, not a semantic one (and the double-buffered/blocking variants
+    are bit-identical through the full op too)."""
+    out = distributed(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from types import SimpleNamespace
+from repro.core.compat import make_mesh
+from repro.models import attention as attn
+from repro.models.sharding import make_recipe, use_recipe
+
+cfg = SimpleNamespace(n_heads=4, n_kv=2, head_dim=16, d_model=64, d_ff=128,
+                      vocab_padded=256, n_experts=0, family='dense')
+mesh = make_mesh((2, 4), ('data', 'model'))
+recipe = make_recipe(cfg, mesh, attn_mode='sp_ring')
+assert recipe.attn_mode == 'sp' and recipe.sp_ring
+
+rng = np.random.default_rng(11)
+p = {
+    'wq': jnp.asarray(rng.standard_normal((64, 4, 16)) * 0.1, jnp.float32),
+    'wk': jnp.asarray(rng.standard_normal((64, 2, 16)) * 0.1, jnp.float32),
+    'wv': jnp.asarray(rng.standard_normal((64, 2, 16)) * 0.1, jnp.float32),
+    'wo': jnp.asarray(rng.standard_normal((4, 16, 64)) * 0.1, jnp.float32),
+}
+x = jnp.asarray(rng.standard_normal((2, 64, 64)), jnp.float32)
+
+ref, _ = attn.gqa_attention(p, x, n_heads=4, n_kv=2, head_dim=16)
+with use_recipe(recipe):
+    ring, _ = attn.gqa_attention(p, x, n_heads=4, n_kv=2, head_dim=16)
+    ring_bl, _ = attn.gqa_attention(p, x, n_heads=4, n_kv=2, head_dim=16,
+                                    sp_ring_double_buffer=False)
+assert np.array_equal(np.asarray(ring), np.asarray(ring_bl))
+assert np.abs(np.asarray(ring) - np.asarray(ref)).max() < 1e-4
+print('OK')
+"""
+    )
+    assert "OK" in out
+
+
+def test_sp_ring_dryrun_zero_serialized_any_kind(distributed):
+    """ISSUE 3 acceptance: the sp ring-attention dry-run trace reports
+    exactly 2*(R-1) ring transfers and 0 serialized collectives of any kind,
+    for the double-buffered AND blocking variants."""
+    out = distributed(
+        """
+from repro.launch.dryrun import sp_ring_dryrun
+
+rep = sp_ring_dryrun(seq=128, grid=(2, 4), verbose=False)
+for variant in ('double_buffered', 'blocking'):
+    r = rep[variant]
+    assert r['serialized'] == 0, (variant, r)
+    assert r['exposed_bytes'] == 0.0, (variant, r)
+    kinds = r['overlap_by_kind']
+    assert list(kinds) == ['collective-permute'], (variant, kinds)
+    assert kinds['collective-permute']['overlapped'] == r['expected_ring_transfers'] == 6
+    assert kinds['collective-permute']['overlap_fraction'] == 1.0
+print('OK')
+"""
+    )
+    assert "OK" in out

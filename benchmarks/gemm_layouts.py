@@ -10,12 +10,16 @@ layout choices change performance but never semantics.
 
 Each row also carries the analytic per-rank comm-volume model (the 1-D
 algorithm replicates B: O(n^2); the SUMMA ring moves panels:
-O(n^2/sqrt(P))), and the SUMMA rows report the measured kind-generic
-overlap classification of the compiled ring — ``overlapped/total``
-collectives per kind (ring permutes AND the reduce-scatter epilogue) off
-the compute def-use chain, plus the exposed (serialized) bytes that stay
-on it (measured once per dataset; the classification is
-majors-independent)."""
+O(n^2/sqrt(P))), split into ``model_valid_bytes`` (payload) and
+``model_padded_bytes`` (wire) so uneven-tile rows never overstate comm
+volume — for the dense algorithms the two columns coincide, for the ragged
+SUMMA (``summa2d_ragged``: every dim bumped +1 so nothing divides the
+grid) the wire moves padded capacity tiles while the model charges valid
+bytes only.  The SUMMA rows report the measured kind-generic overlap
+classification of the compiled ring — ``overlapped/total`` collectives per
+kind (ring permutes AND the reduce-scatter epilogue) off the compute
+def-use chain, plus the exposed (serialized) bytes that stay on it
+(measured once per dataset; the classification is majors-independent)."""
 import json
 import os
 import subprocess
@@ -30,7 +34,8 @@ import numpy as np
 sys.path.insert(0, {src!r})
 sys.path.insert(0, {root!r})
 from examples.distributed_gemm import (
-    comm_volume_model, run_distributed_gemm, run_summa_gemm, summa_ring_program)
+    comm_volume_model, run_distributed_gemm, run_summa_gemm, summa_ring_program,
+    run_ragged_summa_gemm, ragged_summa_program)
 from repro.configs.gemm_case_study import DATASETS, LAYOUT_CONFIGS
 from repro.launch import hlo_walk
 
@@ -38,17 +43,27 @@ GRID = (2, 4)
 ALGOS = dict(
     panel1d=lambda ni, nj, nk, majors: run_distributed_gemm(ni=ni, nj=nj, nk=nk, majors=majors, ranks=8),
     summa2d=lambda ni, nj, nk, majors: run_summa_gemm(ni=ni, nj=nj, nk=nk, majors=majors, grid=GRID),
+    # uneven tiles: +1 on every dim so nothing divides the grid — the
+    # ragged (v-collective) path with padded capacity wire tiles
+    summa2d_ragged=lambda ni, nj, nk, majors: run_ragged_summa_gemm(
+        ni=ni + 1, nj=nj + 1, nk=nk + 1, majors=majors, grid=GRID),
 )
 results = []
 for dataset in {datasets!r}:
     ni, nj, nk = DATASETS[dataset]
-    overlap_cell = None
+    overlap_cells = dict()
     for algo in {algos!r}:
         fn = ALGOS[algo]
         if algo == "summa2d":
             model = comm_volume_model("summa2d", ni=ni, nj=nj, nk=nk, grid=GRID)
+            valid_b = padded_b = model["total_bytes"]
+        elif algo == "summa2d_ragged":
+            model = comm_volume_model("summa2d", ni=ni + 1, nj=nj + 1, nk=nk + 1,
+                                      grid=GRID, ragged=True)
+            valid_b, padded_b = model["total_bytes"], model["total_padded_bytes"]
         else:
             model = comm_volume_model("panel1d", ni=ni, nj=nj, nk=nk, ranks=8)
+            valid_b = padded_b = model["total_bytes"]
         for majors in LAYOUT_CONFIGS:
             times = []
             C = ref = None
@@ -62,25 +77,36 @@ for dataset in {datasets!r}:
                 times.append(_t.perf_counter() - t0)
             np.testing.assert_allclose(C, ref, rtol=1e-3, atol=1e-3)
             overlap, by_kind, exposed = "-", "-", ""
-            if algo == "summa2d":
-                if overlap_cell is None:  # once per dataset: majors-independent
-                    pfn, meta = summa_ring_program(ni=ni, nj=nj, nk=nk, grid=GRID, majors=majors)
-                    st = hlo_walk.analyze(pfn.lower(*meta["abstract_args"]).compile().as_text())
+            if algo in ("summa2d", "summa2d_ragged"):
+                if algo not in overlap_cells:  # once per dataset: majors-independent
+                    if algo == "summa2d":
+                        pfn, meta = summa_ring_program(ni=ni, nj=nj, nk=nk, grid=GRID, majors=majors)
+                        fracs = None
+                    else:
+                        pfn, meta = ragged_summa_program(ni=ni + 1, nj=nj + 1, nk=nk + 1,
+                                                         grid=GRID, majors=majors)
+                        fracs = meta["comm_model"]["valid_fractions"]
+                    st = hlo_walk.analyze(pfn.lower(*meta["abstract_args"]).compile().as_text(),
+                                          valid_fractions=fracs)
                     kinds = ";".join(
                         "%s:%d/%d" % (k, row["overlapped"], row["overlapped"] + row["serialized"])
                         for k, row in sorted(st.overlap_by_kind().items()))
-                    overlap_cell = ("%d/%d" % (st.permutes_overlapped, len(st.permutes)),
-                                    kinds, "%g" % st.exposed_collective_bytes())
-                overlap, by_kind, exposed = overlap_cell
+                    n_perm = len(st.of_kind("collective-permute"))
+                    overlap_cells[algo] = (
+                        "%d/%d" % (st.collectives_overlapped("collective-permute"), n_perm),
+                        kinds, "%g" % st.exposed_collective_bytes())
+                overlap, by_kind, exposed = overlap_cells[algo]
             results.append(dict(dataset=dataset, algo=algo, majors=majors,
                                 mean_s=float(np.mean(times)), std_s=float(np.std(times)),
-                                model_comm_bytes=model["total_bytes"], overlap=overlap,
+                                model_valid_bytes=valid_b, model_padded_bytes=padded_b,
+                                overlap=overlap,
                                 overlap_by_kind=by_kind, exposed_bytes=exposed))
 print("RESULTS_JSON=" + json.dumps(results))
 """
 
 
-def run(datasets=("MINI", "EXTRALARGE"), reps=3, algos=("panel1d", "summa2d")) -> list[str]:
+def run(datasets=("MINI", "EXTRALARGE"), reps=3,
+        algos=("panel1d", "summa2d", "summa2d_ragged")) -> list[str]:
     code = _WORKER.format(src=SRC, root=os.path.abspath(os.path.join(HERE, "..")),
                           datasets=list(datasets), reps=reps, algos=list(algos))
     env = dict(os.environ)
@@ -92,12 +118,12 @@ def run(datasets=("MINI", "EXTRALARGE"), reps=3, algos=("panel1d", "summa2d")) -
         raise RuntimeError(proc.stderr[-3000:])
     line = [l for l in proc.stdout.splitlines() if l.startswith("RESULTS_JSON=")][0]
     results = json.loads(line[len("RESULTS_JSON="):])
-    out = ["dataset,algo,majors,us_per_call,std_us,model_comm_bytes,overlap,"
-           "overlap_by_kind,exposed_bytes"]
+    out = ["dataset,algo,majors,us_per_call,std_us,model_valid_bytes,"
+           "model_padded_bytes,overlap,overlap_by_kind,exposed_bytes"]
     for r in results:
         out.append(f"{r['dataset']},{r['algo']},{r['majors']},{r['mean_s']*1e6:.0f},"
-                   f"{r['std_s']*1e6:.0f},{r['model_comm_bytes']},{r['overlap']},"
-                   f"{r['overlap_by_kind']},{r['exposed_bytes']}")
+                   f"{r['std_s']*1e6:.0f},{r['model_valid_bytes']},{r['model_padded_bytes']},"
+                   f"{r['overlap']},{r['overlap_by_kind']},{r['exposed_bytes']}")
     return out
 
 

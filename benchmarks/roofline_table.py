@@ -45,21 +45,24 @@ def _overlap_cell(rf: dict) -> str:
 def run(mesh="singlepod", tag="baseline") -> list[str]:
     recs = load_records(mesh=mesh, tag=tag)
     out = ["arch,shape,status,t_compute_s,t_memory_s,t_collective_s,"
-           "t_coll_exposed_s,dominant,useful_ratio,roofline_fraction,"
-           "collective_overlap"]
+           "t_coll_exposed_s,coll_wire_bytes,coll_valid_bytes,dominant,"
+           "useful_ratio,roofline_fraction,collective_overlap"]
     for r in recs:
         if r.get("status") == "skipped":
-            out.append(f"{r['arch']},{r['shape']},skipped,,,,,,,,")
+            out.append(f"{r['arch']},{r['shape']},skipped,,,,,,,,,,")
             continue
         if r.get("status") != "ok":
-            out.append(f"{r['arch']},{r['shape']},FAILED,,,,,,,,")
+            out.append(f"{r['arch']},{r['shape']},FAILED,,,,,,,,,,")
             continue
         rf = r["roofline"]
         t_exp = rf.get("t_collective_exposed", rf.get("t_collective", 0.0))
+        wire = rf.get("coll_bytes", 0.0)
+        # valid (payload) bytes: == wire for dense programs / old records
+        valid = rf.get("coll_valid_bytes", wire)
         out.append(
             f"{r['arch']},{r['shape']},ok,{rf['t_compute']:.4g},{rf['t_memory']:.4g},"
-            f"{rf['t_collective']:.4g},{t_exp:.4g},{rf['dominant']},"
-            f"{rf['useful_ratio']:.3f},{rf['roofline_fraction']:.4f},"
+            f"{rf['t_collective']:.4g},{t_exp:.4g},{wire:.6g},{valid:.6g},"
+            f"{rf['dominant']},{rf['useful_ratio']:.3f},{rf['roofline_fraction']:.4f},"
             f"{_overlap_cell(rf)}"
         )
     return out
@@ -69,8 +72,8 @@ def collective_overlap_rows(mesh="singlepod", tag="baseline") -> list[str]:
     """Long-format per-kind exposed-vs-overlapped bytes table (the nightly
     artifact): one row per (arch, shape, collective kind)."""
     recs = load_records(mesh=mesh, tag=tag)
-    out = ["arch,shape,kind,overlapped,serialized,total_bytes,exposed_bytes,"
-           "overlap_fraction"]
+    out = ["arch,shape,kind,overlapped,serialized,total_bytes,valid_bytes,"
+           "exposed_bytes,overlap_fraction"]
     for r in recs:
         if r.get("status") != "ok":
             continue
@@ -80,6 +83,7 @@ def collective_overlap_rows(mesh="singlepod", tag="baseline") -> list[str]:
             out.append(
                 f"{r['arch']},{r['shape']},{kind},{row['overlapped']},"
                 f"{row['serialized']},{row['total_bytes']:.6g},"
+                f"{row.get('valid_bytes', row['total_bytes']):.6g},"
                 f"{row['exposed_bytes']:.6g},"
                 f"{'' if frac is None else f'{frac:.4f}'}"
             )
@@ -96,37 +100,65 @@ def _by_kind_cell(st) -> str:
 
 
 def gemm_model_rows(datasets=None, grid=(2, 4), measure_overlap=False) -> list[str]:
-    """The SUMMA comm-volume model table: per-rank bytes for both GEMM
-    algorithms on the case-study datasets.  With ``measure_overlap`` the
-    double-buffered SUMMA ring is lowered (8 fake devices must already be
-    configured) and the kind-generic HLO overlap classification — per-kind
-    overlapped/total counts plus the exposed (serialized) bytes — is
-    appended."""
+    """The SUMMA comm-volume model table: per-rank bytes for the GEMM
+    algorithms on the case-study datasets, with ``valid`` (payload) and
+    ``padded`` (wire) byte columns reported separately — the dense rows
+    coincide, the ragged rows (``summa2d_ragged``: every dim bumped +1 so
+    nothing divides the grid) keep the padding out of the modeled volume.
+    With ``measure_overlap`` the double-buffered rings are lowered (8 fake
+    devices must already be configured) and the kind-generic HLO overlap
+    classification — per-kind overlapped/total counts plus the exposed
+    (serialized) bytes — is appended; this is the ragged-GEMM overlap table
+    the nightly CI uploads."""
     from examples.distributed_gemm import comm_volume_model
     from repro.configs.gemm_case_study import DATASETS
 
     R, Cc = grid
     names = list(datasets) if datasets else list(DATASETS)
-    out = ["dataset,algo,ni,nj,nk,model_comm_bytes_per_rank,ring_bytes,"
+    out = ["dataset,algo,ni,nj,nk,model_valid_bytes_per_rank,"
+           "model_padded_bytes_per_rank,ring_valid_bytes,ring_padded_bytes,"
            "overlap,overlap_by_kind,exposed_bytes"]
+
+    def _measure(program, fracs):
+        from repro.launch import hlo_walk
+
+        fn, meta = program
+        st = hlo_walk.analyze(fn.lower(*meta["abstract_args"]).compile().as_text(),
+                              valid_fractions=fracs)
+        n_perm = len(st.of_kind("collective-permute"))
+        overlap = f"{st.collectives_overlapped('collective-permute')}/{n_perm}"
+        return overlap, _by_kind_cell(st), f"{st.exposed_collective_bytes():.6g}"
+
     for name in names:
         ni, nj, nk = DATASETS[name]
         m1 = comm_volume_model("panel1d", ni=ni, nj=nj, nk=nk, ranks=R * Cc)
-        out.append(f"{name},panel1d,{ni},{nj},{nk},{m1['total_bytes']},,-,-,")
+        out.append(f"{name},panel1d,{ni},{nj},{nk},{m1['total_bytes']},"
+                   f"{m1['total_bytes']},,,-,-,")
         m2 = comm_volume_model("summa2d", ni=ni, nj=nj, nk=nk, grid=grid)
         overlap = by_kind = "-"
         exposed = ""
         if measure_overlap:
-            from repro.launch import hlo_walk
             from examples.distributed_gemm import summa_ring_program
 
-            fn, meta = summa_ring_program(ni=ni, nj=nj, nk=nk, grid=grid)
-            st = hlo_walk.analyze(fn.lower(*meta["abstract_args"]).compile().as_text())
-            overlap = f"{st.permutes_overlapped}/{len(st.permutes)}"
-            by_kind = _by_kind_cell(st)
-            exposed = f"{st.exposed_collective_bytes():.6g}"
+            overlap, by_kind, exposed = _measure(
+                summa_ring_program(ni=ni, nj=nj, nk=nk, grid=grid), None)
         out.append(f"{name},summa2d,{ni},{nj},{nk},{m2['total_bytes']},"
-                   f"{m2['ring_bytes']},{overlap},{by_kind},{exposed}")
+                   f"{m2['total_bytes']},{m2['ring_bytes']},{m2['ring_bytes']},"
+                   f"{overlap},{by_kind},{exposed}")
+        # uneven tiles: nothing divides the grid; wire = padded capacity
+        ri, rj, rk = ni + 1, nj + 1, nk + 1
+        m3 = comm_volume_model("summa2d", ni=ri, nj=rj, nk=rk, grid=grid, ragged=True)
+        overlap = by_kind = "-"
+        exposed = ""
+        if measure_overlap:
+            from examples.distributed_gemm import ragged_summa_program
+
+            overlap, by_kind, exposed = _measure(
+                ragged_summa_program(ni=ri, nj=rj, nk=rk, grid=grid),
+                m3["valid_fractions"])
+        out.append(f"{name},summa2d_ragged,{ri},{rj},{rk},{m3['total_bytes']:.6g},"
+                   f"{m3['total_padded_bytes']},{m3['ring_bytes']:.6g},"
+                   f"{m3['ring_padded_bytes']},{overlap},{by_kind},{exposed}")
     return out
 
 

@@ -62,14 +62,19 @@ from repro.core import (
     dist_full,
     dist_sharding,
     gather,
+    gatherv_bag,
+    grid_extents,
     make_mesh,
     mpi_cart_traverser,
     mpi_traverser,
+    ragged_split,
     rank_map,
     reduce_scatter_bag,
+    reduce_scatterv_bag,
     ring_shift,
     ring_shift_start,
     scatter,
+    scatterv_bag,
     traverser,
 )
 from repro.core.layout import scalar, vector, into_blocks
@@ -146,7 +151,7 @@ def run_distributed_gemm(*, ni: int, nj: int, nk: int, majors: str = "I/I/K", ra
 
 def comm_volume_model(algo: str, *, ni: int, nj: int, nk: int,
                       grid: tuple[int, int] | None = None, ranks: int | None = None,
-                      dtype_bytes: int = 4) -> dict:
+                      dtype_bytes: int = 4, ragged: bool = False) -> dict:
     """Analytic per-rank communication volume (bytes) of the two algorithms.
 
     The headline asymptotics the benchmark tables report: the 1-D row-panel
@@ -161,6 +166,34 @@ def comm_volume_model(algo: str, *, ni: int, nj: int, nk: int,
         if grid is None:
             raise ValueError("summa2d model needs grid=(rows, cols)")
         R, Cc = grid
+        if ragged:
+            # ragged (v-collective) SUMMA: tiles move at padded *capacity* on
+            # the wire, but the modeled payload is the mean per-rank VALID
+            # bytes.  Rank (r, c) at step s ships B block (k-block c,
+            # j-block (r+s)%R) = ek[c] * ej[(r+s)%R] elements; averaging over
+            # the grid, sum_s ej telescopes to (R-1) * nj / R and mean ek is
+            # nk / Cc — the exact-division formula with real divisions.
+            cap_i, _ = ragged_split(ni, R)
+            cap_k, _ = ragged_split(nk, Cc)
+            cap_jr, _ = ragged_split(nj, R)
+            cap_jc, _ = ragged_split(nj, Cc)
+            ring = (R - 1) * (nk / Cc) * (nj / R) * dtype_bytes
+            ring_padded = (R - 1) * cap_k * cap_jr * dtype_bytes
+            rs = (ni / R) * (nj / Cc) * dtype_bytes
+            rs_padded = cap_i * cap_jc * dtype_bytes
+            return {
+                "algo": algo, "ragged": True,
+                "ring_bytes": ring, "ring_padded_bytes": ring_padded,
+                "reduce_scatter_bytes": rs, "reduce_scatter_padded_bytes": rs_padded,
+                "total_bytes": ring + rs, "total_padded_bytes": ring_padded + rs_padded,
+                # static valid/padded ratios per collective kind, consumed by
+                # hlo_walk.analyze(valid_fractions=...) so padding never
+                # inflates the modeled collective cost
+                "valid_fractions": {
+                    "collective-permute": ring / ring_padded if ring_padded else 1.0,
+                    "reduce-scatter": rs / rs_padded if rs_padded else 1.0,
+                },
+            }
         ring = (R - 1) * (nk // Cc) * (nj // R) * dtype_bytes
         reduce_scatter = (ni // R) * (nj // Cc) * dtype_bytes
         return {"algo": algo, "ring_bytes": ring,
@@ -322,6 +355,165 @@ def run_summa_gemm(*, ni: int, nj: int, nk: int, grid: tuple[int, int] = (2, 4),
     return C_result, C_oracle
 
 
+@functools.lru_cache(maxsize=64)  # reuse the jitted program across calls
+def ragged_summa_program(*, ni: int, nj: int, nk: int, grid: tuple[int, int] = (2, 4),
+                         majors: str = "I/I/K", mesh=None, double_buffer: bool = True):
+    """The *ragged* SUMMA ring: ``ni``/``nj``/``nk`` need NOT divide the grid.
+
+    Every matrix dim is split with :func:`repro.core.ragged_split` into
+    balanced ragged blocks carried as per-rank extents (the MPI v-collective
+    counts) over padded capacity tiles.  The structure is identical to
+    :func:`summa_ring_program` — R ring steps, the panel rotation issued
+    non-blocking *before* each step's local GEMM — except that:
+
+      * A tiles and B panels are ragged DistBags (zero padding behind the
+        valid leading block, so the padded GEMM contributions vanish);
+      * ``ring_shift_start`` rotates the B extents table together with the
+        panels (the receiver adopts the sender's counts);
+      * the epilogue is :func:`repro.core.reduce_scatterv_bag`: the
+        block-ragged partial panels are compacted/re-padded with static
+        slices and reduced+scattered so rank (r, c) lands its
+        ``(ei[r], ejc[c])`` valid C block in a capacity tile.
+
+    ``meta["comm_model"]`` carries the analytic ragged model with both
+    *padded* (wire) and *valid* (payload) bytes plus the per-kind
+    ``valid_fractions`` that ``hlo_walk.analyze`` uses to keep padding out
+    of the modeled collective cost.
+    """
+    c_major, a_major, b_major = majors.upper().split("/")
+    R, Cc = grid
+    if mesh is None:
+        mesh = make_mesh((R, Cc), ("rows", "cols"))
+    cap_i, ei = ragged_split(ni, R)
+    cap_k, ek = ragged_split(nk, Cc)
+    cap_jr, ejr = ragged_split(nj, R)
+    cap_jc, ejc = ragged_split(nj, Cc)
+
+    # --- global layouts + communicator grid (no into_blocks: nothing divides)
+    A_layout = _mat_layout("i", "k", ni, nk, "i" if a_major == "I" else "k")
+    B_layout = _mat_layout("k", "j", nk, nj, "k" if b_major == "K" else "j")
+    dtA = mpi_cart_traverser(
+        [("Ri", "rows"), ("Ck", "cols")],
+        traverser(scalar(np.float32) ^ vector("Ck", Cc) ^ vector("Ri", R)), mesh)
+    dtB = mpi_cart_traverser(
+        [("Rj", "rows"), ("Ck", "cols")],
+        traverser(scalar(np.float32) ^ vector("Ck", Cc) ^ vector("Rj", R)), mesh)
+
+    # --- per-rank padded capacity tile layouts (valid = leading extents) -----
+    A_tile = _mat_layout("i", "k", cap_i, cap_k, "i" if a_major == "I" else "k")
+    B_tile = _mat_layout("k", "j", cap_k, cap_jr, "k" if b_major == "K" else "j")
+    C_tile = _mat_layout("i", "j", cap_i, cap_jc, "i" if c_major == "I" else "j")
+    P_l = _mat_layout("i", "j", cap_i, R * cap_jr, "i")  # partial panel, i-major
+
+    extA = grid_extents(dtA, ("Ri", "Ck"), {"Ri": ("i", ei), "Ck": ("k", ek)})
+    extB = grid_extents(dtB, ("Rj", "Ck"), {"Rj": ("j", ejr), "Ck": ("k", ek)})
+    extP = grid_extents(dtA, ("Ri", "Ck"), {"Ri": ("i", ei)})
+
+    local_majors = f"I/{a_major}/{b_major}"
+
+    def ring_phase(a_data, b_data):
+        A_dist = DistBag(a_data, A_tile, dtA, ("Ri", "Ck"), extents=extA)
+        B_cur = DistBag(b_data, B_tile, dtB, ("Rj", "Ck"), extents=extB)
+        P = dist_full(dtA, P_l)
+        for s in range(R):
+            pend = None
+            if double_buffer and s < R - 1:
+                # MPI_Isend/Irecv analogue; the extents table rotates with
+                # the panels, so the next step's valid region is known
+                pend = ring_shift_start(B_cur, -1, rank_dim="Rj")
+
+            def step(state, p, a, b_panel, _s=s):
+                # padded capacity GEMM: zero padding in A's i/k and the
+                # panel's k/j contributes zeros, so the accumulation into the
+                # rotating j-block stays exact without masks
+                jb = (state["Ri"] + _s) % R
+                new = ops.gemm_panel(a.data, b_panel.data, p.data, jb, majors=local_majors)
+                return p.with_data(new)
+
+            P = rank_map(step, dtA, P, A_dist, B_cur, out_tile_layout=P_l,
+                         out_extents=extP)
+            if s < R - 1:
+                if double_buffer:
+                    B_cur = pend.wait()  # MPI_Wait: completion point
+                else:
+                    B_cur = ring_shift(B_cur, -1, rank_dim="Rj")
+        # ragged epilogue: compact the R block-ragged j slabs, re-pad into Cc
+        # ragged output blocks, reduce over k (grid cols) and scatter j
+        C_grid = reduce_scatterv_bag(P, C_tile, scatter_dim="j",
+                                     in_blocks=(cap_jr, ejr), out_extents=ejc,
+                                     rank_dim="Ck")
+        return C_grid.data
+
+    shA = dist_sharding(dtA, A_tile)
+    shB = dist_sharding(dtB, B_tile)
+    fn = jax.jit(ring_phase, in_shardings=(shA, shB))
+    meta = dict(
+        mesh=mesh, dtA=dtA, dtB=dtB, grid=grid, steps=R,
+        A_layout=A_layout, B_layout=B_layout,
+        A_tile=A_tile, B_tile=B_tile, C_tile=C_tile, panel_layout=P_l,
+        caps=dict(i=cap_i, k=cap_k, jr=cap_jr, jc=cap_jc),
+        extents=dict(i=ei, k=ek, jr=ejr, jc=ejc),
+        A_ragged={"Ri": ("i", ei), "Ck": ("k", ek)},
+        B_ragged={"Rj": ("j", ejr), "Ck": ("k", ek)},
+        C_extents=grid_extents(dtA, ("Ri", "Ck"), {"Ri": ("i", ei), "Ck": ("j", ejc)}),
+        abstract_args=(
+            jax.ShapeDtypeStruct((R, Cc) + A_tile.shape, A_tile.dtype),
+            jax.ShapeDtypeStruct((R, Cc) + B_tile.shape, B_tile.dtype),
+        ),
+        comm_model=comm_volume_model("summa2d", ni=ni, nj=nj, nk=nk, grid=grid,
+                                     ragged=True),
+    )
+    return fn, meta
+
+
+def run_ragged_summa_gemm(*, ni: int, nj: int, nk: int, grid: tuple[int, int] = (2, 4),
+                          majors: str = "I/I/K", mesh=None, verbose: bool = False,
+                          double_buffer: bool = True):
+    """Ragged SUMMA C = A @ B for dims that do NOT divide the grid; returns
+    (C_result, C_oracle) as (ni, nj) numpy arrays.
+
+    A and B enter through :func:`repro.core.scatterv_bag` (MPI_Scatterv with
+    balanced counts), the traced program of :func:`ragged_summa_program` runs
+    the double-buffered ring + v reduce-scatter, and the C tiles come back
+    through :func:`repro.core.gatherv_bag` — padding never appears in any
+    logical result.
+    """
+    R, Cc = grid
+    fn, meta = ragged_summa_program(ni=ni, nj=nj, nk=nk, grid=grid, majors=majors,
+                                    mesh=mesh, double_buffer=double_buffer)
+    dtA, dtB = meta["dtA"], meta["dtB"]
+    A_tile, B_tile, C_tile = meta["A_tile"], meta["B_tile"], meta["C_tile"]
+
+    rng = np.random.default_rng(13)
+    A_np = rng.standard_normal((ni, nk)).astype(np.float32)
+    B_np = rng.standard_normal((nk, nj)).astype(np.float32)
+
+    A_layout, B_layout = meta["A_layout"], meta["B_layout"]
+    A_glob = bag(A_layout, A_np if A_layout.axis_names == ("i", "k") else A_np.T)
+    B_glob = bag(B_layout, B_np if B_layout.axis_names == ("k", "j") else B_np.T)
+
+    t0 = time.perf_counter()
+    A_dist = scatterv_bag(A_glob, A_tile, dtA, meta["A_ragged"])
+    B_dist = scatterv_bag(B_glob, B_tile, dtB, meta["B_ragged"])
+    C_data = fn(A_dist.data, B_dist.data)  # the whole ring + epilogue, one program
+    C_grid = DistBag(C_data, C_tile, dtA, ("Ri", "Ck"), extents=meta["C_extents"])
+    C_grid.data.block_until_ready()
+    elapsed = time.perf_counter() - t0
+
+    # gatherv back to a plain (ni, nj) row-major root for checking
+    C_root_l = _mat_layout("i", "j", ni, nj, "i")  # axes (i, j) row-major
+    C_root = gatherv_bag(C_grid, C_root_l)
+    C_result = np.asarray(C_root.data).reshape(ni, nj)
+    C_oracle = A_np @ B_np
+    if verbose:
+        err = np.abs(C_result - C_oracle).max()
+        variant = "double-buffered" if double_buffer else "blocking"
+        print(f"ragged SUMMA[{variant}] majors={majors} grid={grid} "
+              f"ni,nj,nk=({ni},{nj},{nk}) caps={meta['caps']} "
+              f"time={elapsed*1e3:.2f}ms max_err={err:.2e}")
+    return C_result, C_oracle
+
+
 def main():
     from repro.configs.gemm_case_study import DATASETS, LAYOUT_CONFIGS
 
@@ -333,12 +525,20 @@ def main():
     ap.add_argument("--grid", default="2x4", help="SUMMA grid rows x cols")
     ap.add_argument("--blocking", action="store_true",
                     help="SUMMA: blocking ring shifts instead of the double-buffered default")
+    ap.add_argument("--uneven", action="store_true",
+                    help="SUMMA: bump every dim by +1 so nothing divides the "
+                         "grid and the ragged (v-collective) path runs")
     args = ap.parse_args()
 
     ni, nj, nk = DATASETS[args.dataset]
     configs = [args.majors] if args.majors else LAYOUT_CONFIGS
     for majors in configs:
-        if args.summa:
+        if args.summa and args.uneven:
+            grid = tuple(int(x) for x in args.grid.split("x"))
+            C, ref = run_ragged_summa_gemm(ni=ni + 1, nj=nj + 1, nk=nk + 1,
+                                           majors=majors, grid=grid,
+                                           double_buffer=not args.blocking, verbose=True)
+        elif args.summa:
             grid = tuple(int(x) for x in args.grid.split("x"))
             C, ref = run_summa_gemm(ni=ni, nj=nj, nk=nk, majors=majors, grid=grid,
                                     double_buffer=not args.blocking, verbose=True)

@@ -31,9 +31,31 @@ Section    Paper concept                            Module
 §5         layout-parametric distributed GEMM       ``repro.kernels.gemm`` +
                                                     ``examples/distributed_gemm``
 =========  =======================================  =============================
+
+Ragged distribution (MPI v-collectives)
+---------------------------------------
+Non-uniform per-rank buffers — MPI's counts/displacements world — are
+first-class: a :class:`~repro.core.collectives.DistBag` may carry an
+``extents`` table of per-rank valid sizes next to a homogeneous *padded
+capacity* tile layout.  Correspondence:
+
+======================  =====================================================
+MPI                     repro.core
+======================  =====================================================
+``MPI_Scatterv``        :func:`scatterv_bag` (extents = counts, displs =
+                        prefix sums; ``ragged_split`` builds balanced tables)
+``MPI_Gatherv``         :func:`gatherv_bag`
+``MPI_Allgatherv``      :func:`all_gatherv_bag` (+ ``_dist`` / ``_start``)
+``MPI_Alltoallv``       :func:`all_to_allv_bag` (+ ``_start``)
+``Reduce_scatter`` (v)  :func:`reduce_scatterv_bag` (+ ``_start``)
+======================  =====================================================
+
+The non-blocking twins share the dense collectives'
+``_issue_*``/:class:`Pending` request layer; blocking = ``_start().wait()``
+by construction.
 """
 from .compat import make_mesh, shard_map
-from .dims import LayoutError, common_refinement
+from .dims import LayoutError, ceil_div, common_refinement, ragged_split
 from .layout import (
     Axis,
     Layout,
@@ -61,7 +83,7 @@ from .traverser import (
 )
 from .traverser import hoist as hoist_trav
 from .traverser import set_length as set_length_trav
-from .relayout import RelayoutPlan, relayout, relayout_plan, transfer_kind
+from .relayout import RelayoutPlan, check_ragged_dims, relayout, relayout_plan, transfer_kind
 from .request import Pending, wait_all
 from .dist import DistTraverser, mpi_traverser, mpi_cart_traverser
 from .collectives import (
@@ -78,6 +100,16 @@ from .collectives import (
     all_reduce_start,
     reduce_scatter_start,
     all_to_all_start,
+    grid_extents,
+    scatterv_bag,
+    gatherv_bag,
+    all_gatherv_bag,
+    all_gatherv_dist,
+    all_gatherv_start,
+    all_to_allv_bag,
+    all_to_allv_start,
+    reduce_scatterv_bag,
+    reduce_scatterv_start,
     dist_full,
     dist_sharding,
     rank_map,
@@ -96,7 +128,10 @@ from .p2p import (
 
 __all__ = [
     "LayoutError",
+    "ceil_div",
     "common_refinement",
+    "ragged_split",
+    "check_ragged_dims",
     "Axis",
     "Layout",
     "ProtoStructure",
@@ -143,6 +178,16 @@ __all__ = [
     "all_reduce_start",
     "reduce_scatter_start",
     "all_to_all_start",
+    "grid_extents",
+    "scatterv_bag",
+    "gatherv_bag",
+    "all_gatherv_bag",
+    "all_gatherv_dist",
+    "all_gatherv_start",
+    "all_to_allv_bag",
+    "all_to_allv_start",
+    "reduce_scatterv_bag",
+    "reduce_scatterv_start",
     "dist_full",
     "dist_sharding",
     "rank_map",

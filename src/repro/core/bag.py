@@ -73,6 +73,31 @@ class Bag:
         """Rematerialize under a different physical layout (same logical space)."""
         return Bag(relayout(self.data, self.layout, dst), dst)
 
+    def valid_view(self, extents: Mapping[str, int]) -> "Bag":
+        """View of the leading *valid* region of a padded ragged tile.
+
+        ``extents`` maps logical dims to their valid sizes (the MPI
+        v-collective counts); every named dim must map to a single physical
+        axis so the valid elements form a leading hyper-rectangle.  The
+        returned bag's layout is this layout with the named dims resized.
+        """
+        layout = self.layout
+        slicer: list[Any] = [slice(None)] * layout.ndim
+        for d, e in extents.items():
+            axs = layout.dim_axes(d)
+            if len(axs) != 1:
+                raise LayoutError(
+                    f"valid_view: ragged dim {d!r} is blocked over axes {axs}; "
+                    "ragged dims must stay unblocked"
+                )
+            i = layout.axis_index(axs[0])
+            cap = layout.axes[i].size
+            if not (0 <= e <= cap):
+                raise LayoutError(f"valid_view: extent {e} of dim {d!r} exceeds capacity {cap}")
+            slicer[i] = slice(0, e)
+            layout = layout.resize_dim(d, e)
+        return Bag(self.data[tuple(slicer)], layout)
+
     def with_data(self, data) -> "Bag":
         return Bag(data, self.layout)
 

@@ -31,12 +31,47 @@ dependence on the collective, so the XLA scheduler may overlap the two.  The
 blocking collectives are literally ``*_start(...).wait()`` — one
 issue/complete code path, so the two forms are bit-identical by
 construction.
+
+Ragged distribution (the MPI v-collectives)
+-------------------------------------------
+MPI's answer to non-uniform buffers is the ``v`` family —
+``MPI_Scatterv``/``Gatherv``/``Allgatherv``/``Alltoallv`` — whose
+counts/displacements arrays describe a different extent per rank.  The
+layout-agnostic analogue here is :attr:`DistBag.extents`: per-rank *valid*
+sizes along tiled dims, carried next to a homogeneous **padded capacity**
+tile layout.  Valid elements occupy the leading slice along each ragged dim;
+the rest of the buffer is zero padding that rides the wire but never enters
+logical results (``tile()`` returns the valid view).  The extents table is
+static (known at trace time), so every per-rank transform lowers to static
+slices inside one XLA program — no dynamic shapes.
+
+The extents <-> counts/displacements mapping: ``extents[r][dim]`` is rank
+``r``'s *count* along ``dim``; the displacement of rank ``r`` is the prefix
+sum of the preceding ranks' extents along the rank dim that owns ``dim``
+(:func:`repro.core.dims.ragged_split` builds balanced tables).
+
+Correspondence table:
+
+=======================  ====================================================
+MPI                      repro.core
+=======================  ====================================================
+``MPI_Scatterv``         :func:`scatterv_bag` (extents = counts)
+``MPI_Gatherv``          :func:`gatherv_bag`
+``MPI_Allgatherv``       :func:`all_gatherv_bag` / ``all_gatherv_dist``
+``MPI_Iallgatherv``      :func:`all_gatherv_start`
+``MPI_Alltoallv``        :func:`all_to_allv_bag`
+``MPI_Ialltoallv``       :func:`all_to_allv_start`
+``Reduce_scatter`` (v)   :func:`reduce_scatterv_bag` / ``_start``
+=======================  ====================================================
+
+Every v-collective shares the ``_issue_*``/:class:`Pending` path with the
+dense forms: the blocking call is ``*_start(...).wait()`` by construction.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Callable, Sequence
+from typing import Any, Callable, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -46,7 +81,7 @@ from .bag import Bag
 from .compat import shard_map
 from .dims import LayoutError, check_same_space, prod
 from .layout import Axis, Layout
-from .relayout import relayout
+from .relayout import check_ragged_dims, relayout
 from .request import Pending, wait_all
 from .dist import DistTraverser
 
@@ -66,6 +101,16 @@ __all__ = [
     "all_reduce_start",
     "reduce_scatter_start",
     "all_to_all_start",
+    "grid_extents",
+    "scatterv_bag",
+    "gatherv_bag",
+    "all_gatherv_bag",
+    "all_gatherv_dist",
+    "all_gatherv_start",
+    "all_to_allv_bag",
+    "all_to_allv_start",
+    "reduce_scatterv_bag",
+    "reduce_scatterv_start",
     "dist_full",
     "dist_sharding",
     "rank_map",
@@ -93,14 +138,27 @@ class DistBag:
     tile_layout: Layout
     dt: DistTraverser
     rank_dims: tuple[str, ...]
-    # per-rank tile layouts for same-shape heterogeneous bags (e.g. an
-    # all_gather whose ranks declared different destination layouts); when
-    # set, ``tile(r)`` views rank r's buffer through its own layout.
+    # per-rank tile layouts for heterogeneous bags (e.g. an all_gather whose
+    # ranks declared different destination layouts, or a send_recv receiver
+    # keeping its declared layout); when set, ``tile(r)`` views rank r's
+    # buffer through its own layout (reshaping the homogeneous stacked slot
+    # when the per-rank physical shape differs — same element count).
     tile_layouts: tuple[Layout, ...] | None = None
+    # per-rank valid extents for *ragged* bags (the MPI v-collective
+    # counts): a tuple over flat ranks (row-major over ``grid_shape``) of
+    # ``((dim, valid_extent), ...)`` pairs.  The tile buffer keeps the
+    # homogeneous padded *capacity* shape of ``tile_layout``; valid elements
+    # occupy the leading slice along each ragged dim and the rest is zero
+    # padding.  None = dense (every tile full).
+    extents: tuple[tuple[tuple[str, int], ...], ...] | None = None
 
     def __post_init__(self):
         if isinstance(self.rank_dims, str):  # tolerate the pre-grid call style
             object.__setattr__(self, "rank_dims", (self.rank_dims,))
+        if self.extents is not None and len(self.extents) != self.comm_size:
+            raise LayoutError(
+                f"extents table has {len(self.extents)} entries for comm size {self.comm_size}"
+            )
 
     @property
     def rank_dim(self) -> str:
@@ -119,21 +177,87 @@ class DistBag:
     def grid_shape(self) -> tuple[int, ...]:
         return tuple(self.dt.comm_size(d) for d in self.rank_dims)
 
-    def tile(self, rank: int | Sequence[int]) -> Bag:
-        """Host-side view of one rank's tile (reference semantics, tests).
+    # -- ragged queries ---------------------------------------------------------
+    @property
+    def is_ragged(self) -> bool:
+        return self.extents is not None
 
-        ``rank`` is an int for 1-D communicators, a coordinate tuple on grids.
-        """
+    def ragged_dims(self) -> tuple[str, ...]:
+        """Dims with per-rank valid extents (empty for dense bags)."""
+        if self.extents is None:
+            return ()
+        seen: dict[str, None] = {}
+        for entry in self.extents:
+            for d, _ in entry:
+                seen[d] = None
+        return tuple(seen)
+
+    def flat_rank(self, rank: int | Sequence[int]) -> int:
+        """Row-major flat index of a grid coordinate (``MPI_Cart_rank``)."""
         coords = (rank,) if isinstance(rank, int) else tuple(rank)
         if len(coords) != len(self.rank_dims):
             raise LayoutError(f"rank {rank!r} does not address grid {self.rank_dims}")
+        flat = 0
+        for c, s in zip(coords, self.grid_shape):
+            if not 0 <= c < s:
+                raise LayoutError(f"rank {rank!r} out of range for grid {self.grid_shape}")
+            flat = flat * s + c
+        return flat
+
+    def rank_extents(self, rank: int | Sequence[int]) -> dict[str, int]:
+        """Rank ``rank``'s valid extents (full capacity space for dense bags)."""
+        space = dict(self.tile_layout.index_space())
+        if self.extents is not None:
+            space.update(dict(self.extents[self.flat_rank(rank)]))
+        return space
+
+    def tile_padded_bytes(self) -> int:
+        """Bytes of one padded capacity tile — the *wire* size of a transfer."""
+        return self.tile_layout.size_bytes()
+
+    def valid_bytes(self) -> int:
+        """Total valid payload bytes across all ranks (excludes padding)."""
+        import numpy as np
+
+        item = np.dtype(self.tile_layout.dtype).itemsize
+        if self.extents is None:
+            return self.comm_size * self.tile_padded_bytes()
+        total = 0
+        for flat in range(self.comm_size):
+            space = dict(self.tile_layout.index_space())
+            space.update(dict(self.extents[flat]))
+            total += prod(space.values()) * item
+        return total
+
+    def padded_bytes(self) -> int:
+        """Total allocated bytes across all ranks (capacity x comm size)."""
+        return self.comm_size * self.tile_padded_bytes()
+
+    def tile(self, rank: int | Sequence[int]) -> Bag:
+        """Host-side view of one rank's tile (reference semantics, tests).
+
+        ``rank`` is an int for 1-D communicators, a coordinate tuple on
+        grids.  Heterogeneous bags (``tile_layouts``) view the slot through
+        the rank's own layout; ragged bags return the *valid* leading region
+        only (the padding never appears in logical results).
+        """
+        coords = (rank,) if isinstance(rank, int) else tuple(rank)
+        flat = self.flat_rank(coords)
         layout = self.tile_layout
         if self.tile_layouts is not None:
-            flat = 0
-            for c, s in zip(coords, self.grid_shape):
-                flat = flat * s + c
             layout = self.tile_layouts[flat]
-        return Bag(self.data[coords], layout)
+        arr = self.data[coords]
+        if tuple(arr.shape) != layout.shape:
+            if prod(arr.shape) != prod(layout.shape):
+                raise LayoutError(
+                    f"tile({rank!r}): slot shape {tuple(arr.shape)} cannot hold "
+                    f"layout shape {layout.shape}"
+                )
+            arr = arr.reshape(layout.shape)
+        b = Bag(arr, layout)
+        if self.extents is not None and self.extents[flat]:
+            b = b.valid_view(dict(self.extents[flat]))
+        return b
 
     def with_data(self, data) -> "DistBag":
         return dataclasses.replace(self, data=data)
@@ -194,6 +318,187 @@ def _grid_spec(dt: DistTraverser, rank_dims: Sequence[str], tile_ndim: int) -> P
 
 def _lead_shape(dt: DistTraverser, rank_dims: Sequence[str]) -> tuple[int, ...]:
     return tuple(dt.comm_size(d) for d in rank_dims)
+
+
+def grid_extents(
+    dt: DistTraverser,
+    rank_dims: Sequence[str],
+    ragged: Mapping[str, tuple[str, Sequence[int]]],
+) -> tuple[tuple[tuple[str, int], ...], ...]:
+    """Build a flat-rank extents table from per-grid-dim ragged specs.
+
+    ``ragged`` maps a rank dim to ``(tile dim, per-coordinate valid
+    extents)`` — the extents <-> counts mapping of the MPI v-collectives: the
+    extent list is the counts array along that grid dim, the displacements
+    are its prefix sums.  Rank dims absent from ``ragged`` are dense.  The
+    result is indexed row-major over the grid shape, like
+    ``DistBag.tile_layouts``.
+    """
+    for rd in ragged:
+        if rd not in rank_dims:
+            raise LayoutError(f"grid_extents: {rd!r} is not a rank dim (have {tuple(rank_dims)})")
+    seen_dims = [dim for dim, _ in ragged.values()]
+    if len(set(seen_dims)) != len(seen_dims):
+        raise LayoutError(f"grid_extents: a tile dim is ragged over two rank dims: {seen_dims}")
+    shape = [dt.comm_size(d) for d in rank_dims]
+    for rd, (dim, exts) in ragged.items():
+        if len(exts) != dt.comm_size(rd):
+            raise LayoutError(
+                f"grid_extents: {len(exts)} extents for {rd!r} of comm size {dt.comm_size(rd)}"
+            )
+    out = []
+    for coords in itertools.product(*(range(s) for s in shape)):
+        entry = []
+        for rd, c in zip(rank_dims, coords):
+            if rd in ragged:
+                dim, exts = ragged[rd]
+                entry.append((dim, int(exts[c])))
+        out.append(tuple(entry))
+    return tuple(out)
+
+
+def _ragged_owner_candidates(dist: DistBag) -> dict[str, list[int]]:
+    """For each ragged dim, the rank-dim positions its extents are
+    *separable* along (depend only on that position's coordinate) — the
+    inverse of :func:`grid_extents`.  Uniform extents are separable along
+    every position, so callers disambiguate with the root-space sums
+    (:func:`_match_ragged_owners`).  Raises when an extents table is not a
+    per-grid-dim product (hand-built tables may couple dims arbitrarily —
+    those bags still work for p2p/tile views, but not for the gather-side
+    displacement arithmetic that needs per-coordinate counts).
+    """
+    assert dist.extents is not None
+    shape = dist.grid_shape
+    coords_list = list(itertools.product(*(range(s) for s in shape)))
+    by_dim: dict[str, dict[tuple, int]] = {}
+    for coords, entry in zip(coords_list, dist.extents):
+        for d, e in entry:
+            by_dim.setdefault(d, {})[coords] = e
+    out: dict[str, list[int]] = {}
+    for d, table in by_dim.items():
+        if len(table) != len(coords_list):
+            raise LayoutError(f"ragged dim {d!r} has extents on only some ranks")
+        cands = []
+        for p in range(len(shape)):
+            per_coord: dict[int, int] = {}
+            if all(per_coord.setdefault(coords[p], e) == e for coords, e in table.items()):
+                cands.append(p)
+        if not cands:
+            raise LayoutError(
+                f"ragged dim {d!r}: extents do not vary along a single rank dim "
+                f"(not a grid_extents-style table)"
+            )
+        out[d] = cands
+    return out
+
+
+def _ragged_owners(dist: DistBag) -> dict[str, int]:
+    """Unambiguous {ragged dim -> rank-dim position} map for 1-D bags and
+    uniquely-separable tables (all_gatherv/all_to_allv); grid gathers with
+    possibly-uniform dims go through :func:`_match_ragged_owners` instead."""
+    owners = {}
+    for d, cands in _ragged_owner_candidates(dist).items():
+        owners[d] = cands[0]
+    return owners
+
+
+def _match_ragged_owners(dist: DistBag, root_space: Mapping[str, int]) -> dict[str, int]:
+    """Assign each ragged dim to the rank dim that tiles it, as a perfect
+    matching over grid positions.
+
+    Candidates come from separability; the root-space sums disambiguate
+    dims whose extents are uniform (separable along *every* position): the
+    owning position is the one whose per-coordinate extents sum to the root
+    extent.  A small backtracking search finds the permutation (grids are
+    2-3 dims, so this is trivial).
+    """
+    cand_sets = _ragged_owner_candidates(dist)
+    shape = dist.grid_shape
+    filtered: dict[str, list[int]] = {}
+    for d, cands in cand_sets.items():
+        keep = []
+        for p in cands:
+            if sum(_dim_extent_list(dist, d, p)) == root_space.get(d):
+                keep.append(p)
+        if not keep:
+            raise LayoutError(
+                f"gatherv: extents of {d!r} sum to none of the candidate rank "
+                f"dims' totals (root extent {root_space.get(d)})"
+            )
+        filtered[d] = keep
+    dims = sorted(filtered, key=lambda d: len(filtered[d]))
+    if len(dims) != len(shape):
+        raise LayoutError(
+            f"gatherv: ragged dims {dims} must cover every rank dim "
+            f"{dist.rank_dims} exactly once"
+        )
+
+    def assign(i: int, used: set) -> dict[str, int] | None:
+        if i == len(dims):
+            return {}
+        d = dims[i]
+        for p in filtered[d]:
+            if p in used:
+                continue
+            rest = assign(i + 1, used | {p})
+            if rest is not None:
+                rest[d] = p
+                return rest
+        return None
+
+    owners = assign(0, set())
+    if owners is None:
+        raise LayoutError(
+            f"gatherv: no one-to-one assignment of ragged dims {dims} to rank "
+            f"dims {dist.rank_dims} matches the root extents"
+        )
+    return owners
+
+
+def _dim_extent_list(dist: DistBag, dim: str, pos: int) -> list[int]:
+    """Per-coordinate extents of ``dim`` along rank-dim position ``pos``."""
+    shape = dist.grid_shape
+    out = []
+    for c in range(shape[pos]):
+        coords = [0] * len(shape)
+        coords[pos] = c
+        out.append(dist.rank_extents(tuple(coords))[dim])
+    return out
+
+
+def _require_dense(dist: DistBag, what: str, dims: Sequence[str] = ()) -> None:
+    """Trace-time guard: the dense collectives cannot reorganize ragged dims
+    (their counts differ per rank) — direct the caller to the v-form."""
+    if dist.extents is None:
+        return
+    bad = set(dist.ragged_dims()) & set(dims) if dims else set(dist.ragged_dims())
+    if bad:
+        raise LayoutError(
+            f"{what}: bag is ragged along {sorted(bad)}; use the v-collective "
+            "(scatterv/gatherv/all_gatherv/all_to_allv/reduce_scatterv) instead"
+        )
+
+
+def _uniform_extents_along(dist: DistBag, rank_dim: str, what: str):
+    """Extents carried through a collective that reduces over ``rank_dim``:
+    every member of each ``rank_dim`` sub-communicator must agree (an
+    elementwise reduce across differing valid regions is ill-typed)."""
+    if dist.extents is None:
+        return None
+    pos = dist.rank_dims.index(rank_dim)
+    shape = dist.grid_shape
+    out = list(dist.extents)
+    for coords in itertools.product(*(range(s) for s in shape)):
+        if coords[pos] == 0:
+            continue
+        base = list(coords)
+        base[pos] = 0
+        if dist.extents[dist.flat_rank(coords)] != dist.extents[dist.flat_rank(tuple(base))]:
+            raise LayoutError(
+                f"{what}: extents differ across the {rank_dim!r} communicator "
+                "(elementwise reduce over ragged tiles is ill-typed)"
+            )
+    return tuple(out)
 
 
 def _flat_rank(dt: DistTraverser, rank_dim: str):
@@ -260,6 +565,7 @@ def scatter(
 def gather(dist: DistBag, root_layout: Layout) -> Bag:
     """Gather the tiles back into a root bag with ``root_layout`` (any layout
     spanning the same global logical space)."""
+    _require_dense(dist, "gather (use gatherv_bag for ragged tiles)")
     _check_scatter_spaces(root_layout, dist.tile_layout, dist.dt, dist.rank_dims)
     leaves = _all_leaves(dist.dt, dist.rank_dims)
     xfer = _transfer_layout(dist.tile_layout, leaves)
@@ -300,6 +606,7 @@ def _issue_all_gather(
     only); the per-rank transform is selected by the communicator rank.
     """
     dt = dist.dt
+    _require_dense(dist, "all_gather (use all_gatherv_bag for ragged tiles)")
     layouts = (
         [root_layout] if isinstance(root_layout, Layout) else list(root_layout)
     )
@@ -446,6 +753,9 @@ def _issue_all_reduce(
     check_same_space(
         dist.tile_layout.index_space(), out_layout.index_space(), what="all_reduce"
     )
+    carried = _uniform_extents_along(dist, rank_dim, "all_reduce")
+    if carried is not None:
+        check_ragged_dims(dist.tile_layout, out_layout, dist.ragged_dims(), what="all_reduce")
     reducer = _resolve_reduce(op)
     axes = _reduce_axes(dist.dt, rank_dim)
     R = dist.dt.comm_size(rank_dim)
@@ -456,7 +766,10 @@ def _issue_all_reduce(
             red = red / R
         return relayout(red, dist.tile_layout, out_layout)
 
-    return _shard_collective(dist, out_layout, tile_fn)
+    out = _shard_collective(dist, out_layout, tile_fn)
+    if carried is not None:
+        out = dataclasses.replace(out, extents=carried)
+    return out
 
 
 def all_reduce_start(
@@ -515,6 +828,7 @@ def _issue_reduce_scatter(
 ) -> DistBag:
     """Issue the relayout-fused reduce-scatter (shared by the blocking and
     non-blocking entry points)."""
+    _require_dense(dist, "reduce_scatter (use reduce_scatterv_bag for ragged tiles)")
     rank_dim = rank_dim or dist.rank_dims[0]
     if rank_dim not in dist.rank_dims:
         raise LayoutError(f"bag is not distributed over {rank_dim!r} (has {dist.rank_dims})")
@@ -612,6 +926,7 @@ def _issue_all_to_all(
 ) -> DistBag:
     """Issue the relayout-fused all-to-all (shared by the blocking and
     non-blocking entry points)."""
+    _require_dense(dist, "all_to_all (use all_to_allv_bag for ragged tiles)")
     if split_dim == concat_dim:
         raise LayoutError("all_to_all: split_dim and concat_dim must differ")
     rank_dim = rank_dim or dist.rank_dims[0]
@@ -699,6 +1014,521 @@ def all_to_all_bag(
 
 
 # -----------------------------------------------------------------------------
+# ragged v-collectives (MPI_Scatterv / Gatherv / Allgatherv / Alltoallv)
+# -----------------------------------------------------------------------------
+def _check_vscatter(
+    root_layout: Layout,
+    tile_layout: Layout,
+    dt: DistTraverser,
+    rank_dims: Sequence[str],
+    ragged: Mapping[str, tuple[str, Sequence[int]]],
+) -> None:
+    if set(ragged) != set(rank_dims):
+        raise LayoutError(
+            f"scatterv: ragged spec covers {sorted(ragged)} but the operation "
+            f"distributes over {tuple(rank_dims)}; every rank dim needs its "
+            "(tile dim, extents) counts (use scatter for dense block dims)"
+        )
+    root_space = root_layout.index_space()
+    tile_space = tile_layout.index_space()
+    if set(root_space) != set(tile_space):
+        raise LayoutError(
+            f"scatterv: root dims {sorted(root_space)} != tile dims {sorted(tile_space)}"
+        )
+    rdims = []
+    for rd in rank_dims:
+        dim, exts = ragged[rd]
+        rdims.append(dim)
+        if dim not in tile_space:
+            raise LayoutError(f"scatterv: ragged dim {dim!r} missing from tile space")
+        if len(exts) != dt.comm_size(rd):
+            raise LayoutError(
+                f"scatterv: {len(exts)} extents for {rd!r} of comm size {dt.comm_size(rd)}"
+            )
+        if min(exts) < 1:
+            raise LayoutError(f"scatterv: empty block in extents {tuple(exts)} for {rd!r}")
+        if max(exts) > tile_space[dim]:
+            raise LayoutError(
+                f"scatterv: extent {max(exts)} of dim {dim!r} exceeds tile "
+                f"capacity {tile_space[dim]}"
+            )
+        if sum(exts) != root_space[dim]:
+            raise LayoutError(
+                f"scatterv: extents of {dim!r} sum to {sum(exts)} != root extent "
+                f"{root_space[dim]} (counts must tile the root exactly)"
+            )
+    for d, s in tile_space.items():
+        if d not in rdims and root_space[d] != s:
+            raise LayoutError(
+                f"scatterv: dense dim {d!r} extent {s} != root extent {root_space[d]}"
+            )
+    check_ragged_dims(tile_layout, tile_layout, rdims, what="scatterv(tile)")
+
+
+def _prefix_sums(exts: Sequence[int]) -> list[int]:
+    out, acc = [0], 0
+    for e in exts:
+        acc += e
+        out.append(acc)
+    return out
+
+
+def scatterv_bag(
+    root: Bag,
+    tile_layout: Layout,
+    dt: DistTraverser,
+    ragged: Mapping[str, tuple[str, Sequence[int]]],
+    rank_dim: str | Sequence[str] | None = None,
+) -> DistBag:
+    """``MPI_Scatterv``: scatter ``root`` into per-rank *ragged* tiles.
+
+    ``ragged`` maps each rank dim to ``(tile dim, per-coordinate extents)``
+    — the counts array; displacements are its prefix sums.  ``tile_layout``
+    is the homogeneous padded *capacity* layout (its ragged dims sized at the
+    max extent, typically ``ceil(total / R)`` from
+    :func:`repro.core.dims.ragged_split`); rank ``r`` receives its
+    ``extents[r]``-sized logical block in the leading slice with zero
+    padding behind it, relayouted from any root layout exactly like
+    :func:`scatter`.  The result carries the extents table, so downstream
+    collectives and :meth:`DistBag.tile` stay padding-free.
+    """
+    rank_dims = _as_rank_dims(dt, rank_dim)
+    ragged = dict(ragged)
+    _check_vscatter(root.layout, tile_layout, dt, rank_dims, ragged)
+    canon = _dense_layout(root.layout.dtype, list(root.layout.index_space().items()))
+    arr = relayout(root.data, root.layout, canon)
+    axis_of = {d: canon.axis_index(d) for d, _ in canon.dim_map}
+    offs = {rd: _prefix_sums(ragged[rd][1]) for rd in rank_dims}
+    lead = _lead_shape(dt, rank_dims)
+    tiles = []
+    for coords in itertools.product(*(range(s) for s in lead)):
+        slicer: list[Any] = [slice(None)] * canon.ndim
+        shrunk_canon, shrunk_tile = canon, tile_layout
+        for rd, c in zip(rank_dims, coords):
+            dim, exts = ragged[rd]
+            o = offs[rd][c]
+            slicer[axis_of[dim]] = slice(o, o + exts[c])
+            shrunk_canon = shrunk_canon.resize_dim(dim, exts[c])
+            shrunk_tile = shrunk_tile.resize_dim(dim, exts[c])
+        chunk = relayout(arr[tuple(slicer)], shrunk_canon, shrunk_tile)
+        pad = [(0, full - cur) for full, cur in zip(tile_layout.shape, shrunk_tile.shape)]
+        tiles.append(jnp.pad(chunk, pad))
+    data = jnp.stack(tiles).reshape(lead + tile_layout.shape)
+    sharding = NamedSharding(dt.mesh, _grid_spec(dt, rank_dims, tile_layout.ndim))
+    data = jax.device_put(data, sharding)
+    return DistBag(
+        data, tile_layout, dt, tuple(rank_dims), extents=grid_extents(dt, rank_dims, ragged)
+    )
+
+
+def gatherv_bag(dist: DistBag, root_layout: Layout) -> Bag:
+    """``MPI_Gatherv``: assemble the ragged tiles back into a root bag.
+
+    The displacement arithmetic is recovered from the bag's extents table
+    (each ragged dim's counts vary along exactly one rank dim); only the
+    valid leading regions enter the result — the padding never leaves the
+    tiles.  Host-root reference semantics, the inverse of
+    :func:`scatterv_bag` for any ``root_layout`` over the same space.
+    """
+    if dist.extents is None:
+        raise LayoutError("gatherv_bag: bag is dense (no extents); use gather")
+    root_space = root_layout.index_space()
+    tile_space = dist.tile_layout.index_space()
+    if set(root_space) != set(tile_space):
+        raise LayoutError(
+            f"gatherv_bag: root dims {sorted(root_space)} != tile dims {sorted(tile_space)}"
+        )
+    # assign each ragged dim to the rank dim that tiles it; the root-space
+    # sums disambiguate uniform (exactly-divisible) dims
+    owners = _match_ragged_owners(dist, root_space)
+    ext_lists = {d: _dim_extent_list(dist, d, p) for d, p in owners.items()}
+    for d, s in tile_space.items():
+        if d not in owners and root_space[d] != s:
+            raise LayoutError(
+                f"gatherv_bag: dense dim {d!r} extent {s} != root extent {root_space[d]}"
+            )
+    canon = _dense_layout(root_layout.dtype, list(root_space.items()))
+    axis_of = {d: canon.axis_index(d) for d, _ in canon.dim_map}
+    offs = {d: _prefix_sums(exts) for d, exts in ext_lists.items()}
+    out = jnp.zeros(canon.shape, dtype=root_layout.dtype)
+    for coords in itertools.product(*(range(s) for s in dist.grid_shape)):
+        t = dist.tile(coords)  # valid view: ragged dims already resized
+        shrunk_canon = canon
+        slicer: list[Any] = [slice(None)] * canon.ndim
+        for d, p in owners.items():
+            e = ext_lists[d][coords[p]]
+            o = offs[d][coords[p]]
+            shrunk_canon = shrunk_canon.resize_dim(d, e)
+            slicer[axis_of[d]] = slice(o, o + e)
+        out = out.at[tuple(slicer)].set(relayout(t.data, t.layout, shrunk_canon))
+    res = relayout(out, canon, root_layout)
+    res = jax.device_put(res, NamedSharding(dist.dt.mesh, P()))
+    return Bag(res, root_layout)
+
+
+def _issue_all_gatherv(dist: DistBag, root_layout: Layout, rank_dims: Sequence[str]) -> DistBag:
+    """Issue the true on-device all-gather of ragged tiles (shared by the
+    blocking and non-blocking entry points): the padded capacity tiles move
+    over the wire (uniform datatype), and the static per-rank extents drive
+    the valid-slice concatenation *inside* the same XLA program — the
+    ``MPI_Allgatherv`` whose recvcounts/displs are compile-time constants.
+    """
+    dt = dist.dt
+    if dist.extents is None:
+        raise LayoutError("all_gatherv: bag is dense (no extents); use all_gather_*")
+    if len(rank_dims) != 1 or len(dist.rank_dims) != 1:
+        raise LayoutError("all_gatherv currently needs a 1-D communicator")
+    (rd,) = rank_dims
+    owners = _ragged_owners(dist)
+    if len(owners) != 1:
+        raise LayoutError(
+            f"all_gatherv: exactly one ragged (concatenation) dim expected, got {sorted(owners)}"
+        )
+    ((cat_dim, pos),) = owners.items()
+    exts = _dim_extent_list(dist, cat_dim, pos)
+    R = dt.comm_size(rd)
+    total = sum(exts)
+    expected = dict(dist.tile_layout.index_space())
+    expected[cat_dim] = total
+    check_same_space(root_layout.index_space(), expected, what="all_gatherv(root, sum of tiles)")
+    check_ragged_dims(dist.tile_layout, dist.tile_layout, (cat_dim,), what="all_gatherv")
+    ax = dist.tile_layout.axis_index(dist.tile_layout.dim_axes(cat_dim)[0])
+    full_l = dist.tile_layout.resize_dim(cat_dim, total)
+    axes = tuple(dt.rank_mesh_axes(rd))
+
+    def tile_fn(t):
+        g = jax.lax.all_gather(t, axes, axis=0, tiled=False)  # (R, *capacity)
+        parts = [jax.lax.slice_in_dim(g[r], 0, exts[r], axis=ax) for r in range(R)]
+        full = jnp.concatenate(parts, axis=ax)
+        return relayout(full, full_l, root_layout)
+
+    return _shard_collective(dist, root_layout, tile_fn)
+
+
+def all_gatherv_start(
+    dist: DistBag, root_layout: Layout, *, rank_dim: str | Sequence[str] | None = None
+) -> Pending:
+    """Non-blocking ragged all-gather (``MPI_Iallgatherv``): issue the
+    transfer and return a :class:`Pending` whose :meth:`~Pending.wait` hands
+    back a :class:`DistBag` in which every rank holds the full compacted
+    structure in ``root_layout``."""
+    rank_dims = _as_rank_dims(dist.dt, rank_dim) if rank_dim is not None else dist.rank_dims
+    for d in rank_dims:
+        if d not in dist.rank_dims:
+            raise LayoutError(f"bag is not distributed over {d!r} (has {dist.rank_dims})")
+    return Pending(_issue_all_gatherv(dist, root_layout, rank_dims), op="all_gatherv")
+
+
+def all_gatherv_dist(
+    dist: DistBag, root_layout: Layout, *, rank_dim: str | Sequence[str] | None = None
+) -> DistBag:
+    """Blocking ragged all-gather returning the per-rank receive buffers
+    (``all_gatherv_start(...).wait()``)."""
+    return all_gatherv_start(dist, root_layout, rank_dim=rank_dim).wait()
+
+
+def all_gatherv_bag(dist: DistBag, root_layout: Layout) -> Bag:
+    """``MPI_Allgatherv``: every rank ends with the full structure — the
+    ragged tiles' valid regions concatenated in rank order — in
+    ``root_layout``, via the true on-device all-gather."""
+    db = all_gatherv_dist(dist, root_layout)
+    first = db.data[(0,) * len(dist.rank_dims)]
+    out = jax.device_put(first, NamedSharding(dist.dt.mesh, P()))
+    return Bag(out, root_layout)
+
+
+def _issue_reduce_scatterv(
+    dist: DistBag,
+    out_tile_layout: Layout,
+    scatter_dim: str,
+    in_blocks: tuple[int, Sequence[int]],
+    out_extents: Sequence[int],
+    op: str,
+    rank_dim: str | None,
+) -> DistBag:
+    """Issue the ragged reduce-scatter (shared by blocking/non-blocking).
+
+    The input tile's ``scatter_dim`` is *block-ragged*: ``in_blocks =
+    (capacity, extents)`` describes B interior blocks of uniform capacity
+    whose valid leading extents differ (a partial panel accumulated block by
+    block, e.g. the ragged SUMMA epilogue).  The blocks are compacted and
+    re-padded into R output blocks of ``out_extents`` — all static slices,
+    identical on every rank — then reduced+scattered with ``psum_scatter``.
+    Only ``add``/``mean`` are supported: zero padding is their identity.
+    """
+    rank_dim = rank_dim or dist.rank_dims[0]
+    if rank_dim not in dist.rank_dims:
+        raise LayoutError(f"bag is not distributed over {rank_dim!r} (has {dist.rank_dims})")
+    if op not in ("add", "mean"):
+        raise LayoutError(
+            f"reduce_scatterv supports add/mean only (zero padding is their identity), got {op!r}"
+        )
+    if scatter_dim in dist.ragged_dims():
+        raise LayoutError(
+            f"reduce_scatterv: {scatter_dim!r} is leading-ragged in the input; "
+            "its block structure must come via in_blocks"
+        )
+    _uniform_extents_along(dist, rank_dim, "reduce_scatterv")
+    R = dist.dt.comm_size(rank_dim)
+    cap_in, in_exts = in_blocks
+    in_exts = tuple(int(e) for e in in_exts)
+    B = len(in_exts)
+    total = sum(in_exts)
+    out_extents = tuple(int(e) for e in out_extents)
+    if len(out_extents) != R:
+        raise LayoutError(f"reduce_scatterv: {len(out_extents)} out extents for comm size {R}")
+    if sum(out_extents) != total:
+        raise LayoutError(
+            f"reduce_scatterv: out extents sum {sum(out_extents)} != in extents sum {total}"
+        )
+    if max(in_exts) > cap_in or min(in_exts) < 0:
+        raise LayoutError(f"reduce_scatterv: in extents {in_exts} exceed capacity {cap_in}")
+    in_space = dist.tile_layout.index_space()
+    out_space = out_tile_layout.index_space()
+    if in_space.get(scatter_dim) != B * cap_in:
+        raise LayoutError(
+            f"reduce_scatterv: scatter dim {scatter_dim!r} extent {in_space.get(scatter_dim)} "
+            f"!= {B} blocks x capacity {cap_in}"
+        )
+    cap_out = out_space.get(scatter_dim)
+    if cap_out is None or max(out_extents) > cap_out:
+        raise LayoutError(
+            f"reduce_scatterv: out extents {out_extents} exceed output capacity {cap_out}"
+        )
+    expected = dict(in_space)
+    expected[scatter_dim] = cap_out
+    check_same_space(out_space, expected, what=f"reduce_scatterv over {scatter_dim!r}")
+    other_ragged = tuple(d for d in dist.ragged_dims())
+    check_ragged_dims(
+        dist.tile_layout, out_tile_layout, (scatter_dim,) + other_ragged, what="reduce_scatterv"
+    )
+    rest = [(d, s) for d, s in in_space.items() if d != scatter_dim]
+    mid_in = _dense_layout(dist.tile_layout.dtype, rest + [(scatter_dim, B * cap_in)])
+    mid_out = _dense_layout(out_tile_layout.dtype, rest + [(scatter_dim, cap_out)])
+    axes = _reduce_axes(dist.dt, rank_dim)
+
+    def tile_fn(t):
+        x = relayout(t, dist.tile_layout, mid_in)
+        dense = jnp.concatenate(
+            [
+                jax.lax.slice_in_dim(x, b * cap_in, b * cap_in + in_exts[b], axis=-1)
+                for b in range(B)
+            ],
+            axis=-1,
+        )
+        pieces, off = [], 0
+        for r in range(R):
+            e = out_extents[r]
+            blk = jax.lax.slice_in_dim(dense, off, off + e, axis=-1)
+            off += e
+            pad = [(0, 0)] * (blk.ndim - 1) + [(0, cap_out - e)]
+            pieces.append(jnp.pad(blk, pad))
+        stacked = jnp.stack(pieces)  # (R, *mid_out shape), block r = rank r's part
+        y = jax.lax.psum_scatter(stacked, axes, scatter_dimension=0, tiled=False)
+        if op == "mean":
+            y = y / R
+        return relayout(y, mid_out, out_tile_layout)
+
+    out = _shard_collective(dist, out_tile_layout, tile_fn)
+    pos = dist.rank_dims.index(rank_dim)
+    new_ext = []
+    for coords in itertools.product(*(range(s) for s in dist.grid_shape)):
+        entry = [
+            p
+            for p in (dist.extents[dist.flat_rank(coords)] if dist.extents else ())
+            if p[0] != scatter_dim
+        ]
+        entry.append((scatter_dim, out_extents[coords[pos]]))
+        new_ext.append(tuple(entry))
+    return dataclasses.replace(out, extents=tuple(new_ext))
+
+
+def reduce_scatterv_start(
+    dist: DistBag,
+    out_tile_layout: Layout,
+    *,
+    scatter_dim: str,
+    in_blocks: tuple[int, Sequence[int]],
+    out_extents: Sequence[int],
+    op: str = "add",
+    rank_dim: str | None = None,
+) -> Pending:
+    """Non-blocking ragged reduce-scatter: issue and return a
+    :class:`Pending` immediately (see :func:`reduce_scatterv_bag`)."""
+    return Pending(
+        _issue_reduce_scatterv(dist, out_tile_layout, scatter_dim, in_blocks, out_extents, op, rank_dim),
+        op="reduce_scatterv",
+    )
+
+
+def reduce_scatterv_bag(
+    dist: DistBag,
+    out_tile_layout: Layout,
+    *,
+    scatter_dim: str,
+    in_blocks: tuple[int, Sequence[int]],
+    out_extents: Sequence[int],
+    op: str = "add",
+    rank_dim: str | None = None,
+) -> DistBag:
+    """Ragged ``MPI_Reduce_scatter``: elementwise-reduce block-ragged panels
+    across the ``rank_dim`` communicator and scatter ``scatter_dim`` so rank
+    ``r`` keeps its ``out_extents[r]``-sized logical block (leading slice of
+    a ``max(out_extents)``-capacity tile).  See :func:`_issue_reduce_scatterv`
+    for the block-compaction semantics."""
+    return reduce_scatterv_start(
+        dist,
+        out_tile_layout,
+        scatter_dim=scatter_dim,
+        in_blocks=in_blocks,
+        out_extents=out_extents,
+        op=op,
+        rank_dim=rank_dim,
+    ).wait()
+
+
+def _issue_all_to_allv(
+    dist: DistBag,
+    out_tile_layout: Layout,
+    split_dim: str,
+    concat_dim: str,
+    split_extents: Sequence[int],
+    rank_dim: str | None,
+) -> DistBag:
+    """Issue the ragged all-to-all (shared by blocking/non-blocking).
+
+    The ragged transpose-reshard: a bag tiled raggedly along ``concat_dim``
+    (its extents table) becomes tiled raggedly along ``split_dim``
+    (``split_extents``); rank ``r`` sends the ``(split_extents[j],
+    my-concat-extent)`` sub-block to rank ``j``.  Blocks move at uniform
+    padded capacity over the wire; both the send-side split and the
+    receive-side compaction are static slices identical on every rank, so
+    the whole exchange stays one SPMD program — ``MPI_Alltoallv`` with
+    compile-time counts.
+    """
+    if split_dim == concat_dim:
+        raise LayoutError("all_to_allv: split_dim and concat_dim must differ")
+    rank_dim = rank_dim or dist.rank_dims[0]
+    if rank_dim not in dist.rank_dims:
+        raise LayoutError(f"bag is not distributed over {rank_dim!r} (has {dist.rank_dims})")
+    if len(dist.rank_dims) != 1:
+        raise LayoutError("all_to_allv currently needs a 1-D communicator")
+    R = dist.dt.comm_size(rank_dim)
+    split_extents = tuple(int(e) for e in split_extents)
+    if len(split_extents) != R:
+        raise LayoutError(f"all_to_allv: {len(split_extents)} split extents for comm size {R}")
+    if dist.extents is None:
+        raise LayoutError(
+            "all_to_allv: input must be ragged along concat_dim (use all_to_all for dense)"
+        )
+    owners = _ragged_owners(dist)
+    if set(owners) != {concat_dim}:
+        raise LayoutError(
+            f"all_to_allv: input must be ragged along exactly {concat_dim!r} "
+            f"(ragged dims: {sorted(owners)})"
+        )
+    concat_exts = _dim_extent_list(dist, concat_dim, owners[concat_dim])
+    in_space = dist.tile_layout.index_space()
+    out_space = out_tile_layout.index_space()
+    X_total = sum(split_extents)
+    if in_space.get(split_dim) != X_total:
+        raise LayoutError(
+            f"all_to_allv: split dim {split_dim!r} extent {in_space.get(split_dim)} "
+            f"!= split extents sum {X_total}"
+        )
+    cap_s = out_space.get(split_dim)
+    if cap_s is None or max(split_extents) > cap_s:
+        raise LayoutError(
+            f"all_to_allv: split extents {split_extents} exceed output capacity {cap_s}"
+        )
+    C_total = sum(concat_exts)
+    if out_space.get(concat_dim) != C_total:
+        raise LayoutError(
+            f"all_to_allv: concat dim {concat_dim!r} output extent "
+            f"{out_space.get(concat_dim)} != concat extents sum {C_total}"
+        )
+    expected = {d: s for d, s in in_space.items() if d not in (split_dim, concat_dim)}
+    expected[split_dim] = cap_s
+    expected[concat_dim] = C_total
+    check_same_space(out_space, expected, what="all_to_allv")
+    check_ragged_dims(
+        dist.tile_layout, out_tile_layout, (split_dim, concat_dim), what="all_to_allv"
+    )
+    cap_c = in_space[concat_dim]
+    rest = [(d, s) for d, s in in_space.items() if d not in (split_dim, concat_dim)]
+    mid_in = _dense_layout(
+        dist.tile_layout.dtype, rest + [(split_dim, X_total), (concat_dim, cap_c)]
+    )
+    mid_out = _dense_layout(
+        out_tile_layout.dtype, rest + [(split_dim, cap_s), (concat_dim, C_total)]
+    )
+    axes = _reduce_axes(dist.dt, rank_dim)
+
+    def tile_fn(t):
+        x = relayout(t, dist.tile_layout, mid_in)  # (..., X_total, cap_c)
+        pieces, off = [], 0
+        for j in range(R):
+            e = split_extents[j]
+            p = jax.lax.slice_in_dim(x, off, off + e, axis=-2)
+            off += e
+            pad = [(0, 0)] * x.ndim
+            pad[-2] = (0, cap_s - e)
+            pieces.append(jnp.pad(p, pad))
+        stacked = jnp.stack(pieces)  # (R, ..., cap_s, cap_c)
+        y = jax.lax.all_to_all(stacked, axes, split_axis=0, concat_axis=0, tiled=False)
+        # received piece j is valid (split_extents[me], concat_exts[j]);
+        # compact the concat padding — the extents list is shared knowledge,
+        # so the slice sizes are the same on every rank
+        parts = [jax.lax.slice_in_dim(y[j], 0, concat_exts[j], axis=-1) for j in range(R)]
+        full = jnp.concatenate(parts, axis=-1)  # (..., cap_s, C_total)
+        return relayout(full, mid_out, out_tile_layout)
+
+    out = _shard_collective(dist, out_tile_layout, tile_fn)
+    new_ext = tuple(((split_dim, split_extents[r]),) for r in range(R))
+    return dataclasses.replace(out, extents=new_ext)
+
+
+def all_to_allv_start(
+    dist: DistBag,
+    out_tile_layout: Layout,
+    *,
+    split_dim: str,
+    concat_dim: str,
+    split_extents: Sequence[int],
+    rank_dim: str | None = None,
+) -> Pending:
+    """Non-blocking ragged all-to-all (``MPI_Ialltoallv``): issue the
+    reshard and return a :class:`Pending` immediately."""
+    return Pending(
+        _issue_all_to_allv(dist, out_tile_layout, split_dim, concat_dim, split_extents, rank_dim),
+        op="all_to_allv",
+    )
+
+
+def all_to_allv_bag(
+    dist: DistBag,
+    out_tile_layout: Layout,
+    *,
+    split_dim: str,
+    concat_dim: str,
+    split_extents: Sequence[int],
+    rank_dim: str | None = None,
+) -> DistBag:
+    """``MPI_Alltoallv``: reshard a bag tiled raggedly along ``concat_dim``
+    into one tiled raggedly along ``split_dim`` (see
+    :func:`_issue_all_to_allv`); blocking = ``all_to_allv_start(...).wait()``
+    by construction."""
+    return all_to_allv_start(
+        dist,
+        out_tile_layout,
+        split_dim=split_dim,
+        concat_dim=concat_dim,
+        split_extents=split_extents,
+        rank_dim=rank_dim,
+    ).wait()
+
+
+# -----------------------------------------------------------------------------
 # per-rank compute
 # -----------------------------------------------------------------------------
 def rank_map(
@@ -707,8 +1537,14 @@ def rank_map(
     *dist_bags: DistBag,
     out_tile_layout: Layout | None = None,
     rank_dim: str | Sequence[str] | None = None,
+    out_extents: tuple[tuple[tuple[str, int], ...], ...] | None = None,
 ) -> DistBag:
     """Run ``fn(rank, *tile_bags) -> tile_bag_or_array`` on every rank.
+
+    ``out_extents`` (optional) attaches a per-rank valid-extents table to the
+    result — per-rank compute on padded ragged tiles (``fn`` sees the full
+    capacity buffers and is responsible for keeping the padding inert, e.g.
+    zeros under add-reductions).
 
     The per-rank computation sees plain :class:`Bag` tiles in their declared
     layouts (paper Listing 5's ``modify(tile[state])``).  Implemented with
@@ -747,4 +1583,4 @@ def rank_map(
     mapped = shard_map(
         shard_fn, mesh=dt.mesh, in_specs=in_specs, out_specs=out_spec
     )(*[db.data for db in dist_bags])
-    return DistBag(mapped, out_layout, dt, rank_dims)
+    return DistBag(mapped, out_layout, dt, rank_dims, extents=out_extents)

@@ -19,6 +19,8 @@ __all__ = [
     "mixed_radix_join",
     "common_refinement",
     "prod",
+    "ceil_div",
+    "ragged_split",
 ]
 
 # A logical index space: ordered mapping dim name -> extent.
@@ -35,6 +37,31 @@ class LayoutError(TypeError):
 
 def prod(xs: Iterable[int]) -> int:
     return math.prod(xs)
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def ragged_split(total: int, parts: int) -> tuple[int, tuple[int, ...]]:
+    """Balanced ragged split of ``total`` into ``parts`` blocks.
+
+    Returns ``(capacity, extents)``: the uniform *padded* block capacity
+    (``ceil(total / parts)``) and the per-block valid extents (the
+    counts of the MPI ``Scatterv``/``Gatherv`` family; displacements are the
+    prefix sums).  Balanced: extents differ by at most one, so no block is
+    ever empty when ``total >= parts``.
+    """
+    if parts <= 0:
+        raise LayoutError(f"ragged_split({total}, {parts}): parts must be positive")
+    if total < parts:
+        raise LayoutError(
+            f"ragged_split({total}, {parts}): extent smaller than part count "
+            "(empty ragged blocks are not representable as layouts)"
+        )
+    base, rem = divmod(total, parts)
+    extents = tuple(base + (1 if i < rem else 0) for i in range(parts))
+    return ceil_div(total, parts), extents
 
 
 def check_same_space(a: Mapping[str, int], b: Mapping[str, int], *, what: str = "operands") -> None:

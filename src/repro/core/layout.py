@@ -147,6 +147,25 @@ class Layout:
         self._require_resolved()
         return {d: self.dim_size(d) for d, _ in self.dim_map}
 
+    def resize_dim(self, dim: str, size: int) -> "Layout":
+        """This layout with logical dim ``dim`` resized to ``size``.
+
+        Ragged tiles use this to view the *valid* leading sub-extent of a
+        padded capacity axis (MPI_Scatterv counts vs the padded buffer).  The
+        dim must map to a single physical axis: a blocked dim would interleave
+        padding with valid elements, which is exactly what ragged layouts
+        forbid (see :func:`repro.core.relayout.check_ragged_dims`).
+        """
+        axs = self.dim_axes(dim)
+        if len(axs) != 1:
+            raise LayoutError(
+                f"resize_dim({dim!r}): dim is blocked over axes {axs}; "
+                "ragged dims must map to a single physical axis"
+            )
+        (ax,) = axs
+        axes = tuple(Axis(a.name, size if a.name == ax else a.size) for a in self.axes)
+        return Layout(self.dtype, axes, self.dim_map)
+
     def is_resolved(self) -> bool:
         return all(a.size is not None for a in self.axes)
 

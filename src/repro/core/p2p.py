@@ -38,7 +38,16 @@ MPI                            repro.core
 ``MPI_Iallreduce``             ``collectives.all_reduce_start``
 ``MPI_Ireduce_scatter``        ``collectives.reduce_scatter_start``
 ``MPI_Ialltoall``              ``collectives.all_to_all_start``
+``MPI_Scatterv``/``Gatherv``   ``collectives.scatterv_bag`` /
+                               ``collectives.gatherv_bag`` (per-rank extents)
+``MPI_Iallgatherv``            ``collectives.all_gatherv_start``
+``MPI_Ialltoallv``             ``collectives.all_to_allv_start``
 =============================  ================================================
+
+Ragged bags move at their padded *capacity* (the uniform wire datatype);
+the per-rank valid extents ride the request object's result bag, and a
+transfer hands the receiver the sender's counts — ``ring_shift`` on a
+ragged bag rotates the extents table together with the tiles.
 
 Model-stack rings (sequence-parallel ring attention, which runs *inside* a
 ``shard_map`` body on raw per-device arrays rather than on ``DistBag``)
@@ -66,9 +75,12 @@ from typing import Iterable, Sequence
 import jax
 import jax.numpy as jnp
 
+import dataclasses
+import itertools
+
 from .dims import LayoutError, check_same_space
 from .layout import Layout
-from .relayout import relayout
+from .relayout import check_ragged_dims, relayout
 from .request import Pending, wait_all
 from .collectives import DistBag, _shard_collective
 
@@ -115,7 +127,38 @@ def _dst_layout(dist: DistBag, dst_tile_layout: Layout | None) -> Layout:
     check_same_space(
         dist.tile_layout.index_space(), dst.index_space(), what="p2p endpoints"
     )
+    if dist.is_ragged:
+        # the padded capacity tile is the wire datatype: the valid region
+        # survives the endpoint relayout only as a leading rectangle
+        check_ragged_dims(dist.tile_layout, dst, dist.ragged_dims(), what="p2p endpoints")
     return dst
+
+
+def _moved_extents(dist: DistBag, rank_dim: str, pairs: Sequence[tuple[int, int]], *, keep_bystanders: bool):
+    """Extents table after tiles move along ``rank_dim`` per ``pairs``.
+
+    The receiving rank adopts the *source's* extents (the counts travel with
+    the tile, exactly like an MPI_Recv with the sender's count); ranks no
+    pair sends to either keep their own (``send_recv`` bystanders) or drop
+    to zero-extent (``permute``'s zero tiles).
+    """
+    if dist.extents is None:
+        return None
+    pos = dist.rank_dims.index(rank_dim)
+    shape = dist.grid_shape
+    recv = {d: s for s, d in pairs}
+    new = []
+    for coords in itertools.product(*(range(s) for s in shape)):
+        c = coords[pos]
+        if c in recv:
+            src_coords = list(coords)
+            src_coords[pos] = recv[c]
+            new.append(dist.extents[dist.flat_rank(tuple(src_coords))])
+        elif keep_bystanders:
+            new.append(dist.extents[dist.flat_rank(coords)])
+        else:
+            new.append(tuple((d, 0) for d, _ in dist.extents[dist.flat_rank(coords)]))
+    return tuple(new)
 
 
 def _issue_permute(
@@ -134,7 +177,12 @@ def _issue_permute(
         r = relayout(t, dist.tile_layout, dst)
         return jax.lax.ppermute(r, axis, pairs)
 
-    return _shard_collective(dist, dst, tile_fn)
+    out = _shard_collective(dist, dst, tile_fn)
+    if dist.is_ragged:
+        out = dataclasses.replace(
+            out, extents=_moved_extents(dist, rank_dim, pairs, keep_bystanders=False)
+        )
+    return out
 
 
 def permute(
@@ -253,24 +301,46 @@ def send_recv(
     rank ``src``'s tile, every other rank keeps its own.
 
     ``dst_tile_layout`` is the receiver's declared datatype: it is the *wire*
-    layout of the transfer, and the pack (``src`` layout -> wire) and unpack
-    (wire -> receiver's buffer) transforms ride inside the same XLA program
-    as the ``ppermute``.  Ranks other than ``dst`` posted no matching
-    ``MPI_Recv``, so their tiles pass through *untouched* — bit-identical, in
-    the source layout.  Because a :class:`DistBag` holds one homogeneous tile
-    layout, the result stays in the source tile layout for every rank
-    (including the receiver's slot, unpacked into it); use
-    ``out.tile(dst).to_layout(...)`` for a different host-side view.
+    layout of the transfer, and the pack transform (``src`` layout -> wire)
+    rides inside the same XLA program as the ``ppermute``.  The receiver
+    *keeps* its declared layout: the result bag records it in
+    ``tile_layouts[dst]`` (the per-rank heterogeneous view — different
+    physical shapes allowed, the stacked slot stores the receiver's raw
+    buffer bytes), so ``out.tile(dst)`` is the received tile in the
+    receiver's own datatype with no unpack round-trip.  Ranks other than
+    ``dst`` posted no matching ``MPI_Recv``, so their tiles pass through
+    *untouched* — bit-identical, in the source layout.  On ragged bags the
+    extents travel with the tile (the receiver adopts ``src``'s counts).
     """
     rank_dim, axis, R = _single_axis(dist, rank_dim)
     _check_perm([(src, dst)], R)
+    if dist.tile_layouts is not None:
+        raise LayoutError(
+            "send_recv: bag already carries per-rank heterogeneous layouts; "
+            "relayout to a homogeneous bag first"
+        )
     wire_l = _dst_layout(dist, dst_tile_layout)
 
     def tile_fn(t):
         packed = relayout(t, dist.tile_layout, wire_l)  # MPI datatype, send side
         recv = jax.lax.ppermute(packed, axis, [(src, dst)])
-        unpacked = relayout(recv, wire_l, dist.tile_layout)  # receive side
+        # the receiver keeps the wire datatype: its slot stores the received
+        # buffer's raw bytes reinterpreted into the homogeneous stacked shape
+        # (same element count; tile(dst) reshapes back through tile_layouts)
+        kept = recv.reshape(dist.tile_layout.shape)
         me = jax.lax.axis_index(axis)
-        return jnp.where(me == dst, unpacked, t)  # bystanders: untouched
+        return jnp.where(me == dst, kept, t)  # bystanders: untouched
 
-    return _shard_collective(dist, dist.tile_layout, tile_fn)
+    out = _shard_collective(dist, dist.tile_layout, tile_fn)
+    if wire_l is not dist.tile_layout and wire_l != dist.tile_layout:
+        pos = out.rank_dims.index(rank_dim)
+        layouts = tuple(
+            wire_l if coords[pos] == dst else dist.tile_layout
+            for coords in itertools.product(*(range(s) for s in out.grid_shape))
+        )
+        out = dataclasses.replace(out, tile_layouts=layouts)
+    if dist.is_ragged:
+        out = dataclasses.replace(
+            out, extents=_moved_extents(dist, rank_dim, [(src, dst)], keep_bystanders=True)
+        )
+    return out

@@ -23,7 +23,27 @@ from typing import Any, Sequence
 from .dims import LayoutError, check_same_space, common_refinement, prod
 from .layout import Layout
 
-__all__ = ["RelayoutPlan", "relayout_plan", "relayout", "transfer_kind"]
+__all__ = ["RelayoutPlan", "relayout_plan", "relayout", "transfer_kind", "check_ragged_dims"]
+
+
+def check_ragged_dims(src: Layout, dst: Layout, dims, *, what: str = "relayout") -> None:
+    """Ragged-padding safety check for transfers of padded capacity tiles.
+
+    A padded ragged tile keeps its valid region a *leading* hyper-rectangle
+    through a relayout only if every ragged dim maps to a single physical
+    axis on both sides: axis permutations preserve leading rectangles, while
+    blocking a ragged dim would interleave padding with valid elements (the
+    analogue of an MPI datatype that strides *through* the v-collective's
+    displacement gaps).  Raises :class:`LayoutError` at trace time.
+    """
+    for d in dims:
+        for side, layout in (("source", src), ("destination", dst)):
+            axs = layout.dim_axes(d)
+            if len(axs) != 1:
+                raise LayoutError(
+                    f"{what}: ragged dim {d!r} is blocked over axes {axs} in the "
+                    f"{side} layout; ragged dims must map to a single physical axis"
+                )
 
 
 @dataclasses.dataclass(frozen=True)

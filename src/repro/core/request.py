@@ -30,7 +30,16 @@ MPI                        repro.core
 ``MPI_Iallreduce``         ``collectives.all_reduce_start``
 ``MPI_Ireduce_scatter``    ``collectives.reduce_scatter_start``
 ``MPI_Ialltoall``          ``collectives.all_to_all_start``
+``MPI_Iallgatherv``        ``collectives.all_gatherv_start`` (ragged tiles)
+``MPI_Ialltoallv``         ``collectives.all_to_allv_start``
+``Ireduce_scatter`` (v)    ``collectives.reduce_scatterv_start``
 =========================  ====================================================
+
+The v-collective requests carry ragged :class:`~repro.core.collectives.
+DistBag` results: per-rank valid extents (the counts/displacements of the
+MPI ``v`` family, static at trace time) next to a homogeneous padded
+capacity buffer — see the "Ragged distribution" section of
+``repro.core.collectives``.
 
 A :class:`Pending` can carry any DistBag-shaped result: a ``DistBag``, a
 ``Bag``, or (inside ``shard_map`` bodies, where the model stack's rings

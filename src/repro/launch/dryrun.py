@@ -174,6 +174,18 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False, attn_mode
     return record, compiled
 
 
+def _import_examples_gemm():
+    """examples/ lives at the repo root, not in src/ — bootstrap the path."""
+    import sys
+
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    import examples.distributed_gemm as dg
+
+    return dg
+
+
 def summa_dryrun(*, ni: int = 256, nj: int = 256, nk: int = 256,
                  grid: tuple[int, int] = (2, 4), majors: str = "I/I/K",
                  verbose: bool = True) -> dict:
@@ -187,22 +199,17 @@ def summa_dryrun(*, ni: int = 256, nj: int = 256, nk: int = 256,
     """
     from repro.launch import hlo_walk
 
-    import sys
-    root = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", ".."))
-    if root not in sys.path:  # examples/ lives at the repo root, not in src/
-        sys.path.insert(0, root)
-    import examples.distributed_gemm as dg
-
+    dg = _import_examples_gemm()
     out: dict = {"ni": ni, "nj": nj, "nk": nk, "grid": list(grid), "majors": majors}
     for variant, db in (("double_buffered", True), ("blocking", False)):
         fn, meta = dg.summa_ring_program(ni=ni, nj=nj, nk=nk, grid=grid,
                                          majors=majors, double_buffer=db)
         st = hlo_walk.analyze(fn.lower(*meta["abstract_args"]).compile().as_text())
         out[variant] = {
-            "collective_permutes": len(st.permutes),
-            "overlapped": st.permutes_overlapped,
-            "serialized": st.permutes_serialized,
-            "permute_overlap_fraction": st.permute_overlap_fraction,
+            "collective_permutes": len(st.of_kind("collective-permute")),
+            "overlapped": st.collectives_overlapped("collective-permute"),
+            "serialized": st.collectives_serialized("collective-permute"),
+            "permute_overlap_fraction": st.overlap_fraction("collective-permute"),
             "hlo_permute_bytes": st.coll_by_op.get("collective-permute", 0.0),
             "model_ring_bytes": meta["comm_model"]["ring_bytes"],
             "model_total_bytes": meta["comm_model"]["total_bytes"],
@@ -211,6 +218,49 @@ def summa_dryrun(*, ni: int = 256, nj: int = 256, nk: int = 256,
             "collectives_serialized_any_kind": st.collectives_serialized(),
             "collectives_overlapped_any_kind": st.collectives_overlapped(),
             "exposed_bytes": st.exposed_collective_bytes(),
+            "overlap_by_kind": st.overlap_by_kind(),
+        }
+    if verbose:
+        print(json.dumps(out, indent=1))
+    return out
+
+
+def ragged_summa_dryrun(*, ni: int = 35, nj: int = 35, nk: int = 35,
+                        grid: tuple[int, int] = (2, 4), majors: str = "I/I/K",
+                        verbose: bool = True) -> dict:
+    """The ``--uneven`` gate: dry-run the *ragged* SUMMA ring (dims that do
+    NOT divide the grid — padded capacity tiles + per-rank extents) and prove
+
+      * 0 serialized collectives of any kind (the ragged panels double-buffer
+        exactly like the dense ones — raggedness costs no overlap), and
+      * the walker's wire bytes equal the analytic *padded* ring model while
+        its valid bytes equal the *valid* (payload) model — the static proof
+        that padding rides the wire but never inflates the modeled cost.
+    """
+    from repro.launch import hlo_walk
+
+    dg = _import_examples_gemm()
+    out: dict = {"ni": ni, "nj": nj, "nk": nk, "grid": list(grid), "majors": majors,
+                 "ragged": True}
+    for variant, db in (("double_buffered", True), ("blocking", False)):
+        fn, meta = dg.ragged_summa_program(ni=ni, nj=nj, nk=nk, grid=grid,
+                                           majors=majors, double_buffer=db)
+        model = meta["comm_model"]
+        st = hlo_walk.analyze(fn.lower(*meta["abstract_args"]).compile().as_text(),
+                              valid_fractions=model["valid_fractions"])
+        wire = st.coll_by_op.get("collective-permute", 0.0)
+        valid = st.coll_by_op_valid.get("collective-permute", 0.0)
+        out[variant] = {
+            "collectives": len(st.collectives),
+            "overlapped": st.collectives_overlapped(),
+            "serialized": st.collectives_serialized(),
+            "exposed_bytes": st.exposed_collective_bytes(),
+            "hlo_wire_permute_bytes": wire,
+            "hlo_valid_permute_bytes": valid,
+            "model_ring_padded_bytes": model["ring_padded_bytes"],
+            "model_ring_valid_bytes": model["ring_bytes"],
+            "wire_matches_padded_model": wire == model["ring_padded_bytes"],
+            "valid_matches_ragged_model": abs(valid - model["ring_bytes"]) < 1e-6,
             "overlap_by_kind": st.overlap_by_kind(),
         }
     if verbose:
@@ -336,6 +386,14 @@ def main() -> None:
                          "serialized collectives of any kind")
     ap.add_argument("--sp-ring-seq", type=int, default=256, help="seq len for --sp-ring")
     ap.add_argument("--sp-ring-grid", default="2x4", help="data x model for --sp-ring")
+    ap.add_argument("--uneven", action="store_true",
+                    help="dry-run the RAGGED SUMMA (dims not divisible by the "
+                         "grid) and gate on 0 serialized collectives AND "
+                         "modeled bytes == the analytic ragged ring model "
+                         "(valid bytes, not padded)")
+    # 35 is odd AND 3 mod 4: every dim is genuinely ragged on the default grid
+    ap.add_argument("--uneven-dims", default="35,35,35", help="ni,nj,nk for --uneven")
+    ap.add_argument("--uneven-grid", default="2x4", help="rows x cols for --uneven")
     args = ap.parse_args()
 
     if args.summa_gemm:
@@ -344,6 +402,17 @@ def main() -> None:
         rep = summa_dryrun(ni=ni, nj=nj, nk=nk, grid=grid)
         bad = sum(rep[v]["collectives_serialized_any_kind"]
                   for v in ("double_buffered", "blocking"))
+        raise SystemExit(1 if bad else 0)
+
+    if args.uneven:
+        ni, nj, nk = (int(x) for x in args.uneven_dims.split(","))
+        grid = tuple(int(x) for x in args.uneven_grid.split("x"))
+        rep = ragged_summa_dryrun(ni=ni, nj=nj, nk=nk, grid=grid)
+        bad = 0
+        for v in ("double_buffered", "blocking"):
+            bad += rep[v]["serialized"]
+            bad += 0 if rep[v]["wire_matches_padded_model"] else 1
+            bad += 0 if rep[v]["valid_matches_ragged_model"] else 1
         raise SystemExit(1 if bad else 0)
 
     if args.sp_ring:

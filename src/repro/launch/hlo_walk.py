@@ -42,7 +42,21 @@ op costs by the product of enclosing trip counts.  It produces:
                            double-buffered SUMMA and ring-attention rings.
 
 ``permutes`` / ``permute_overlap_fraction`` survive as thin deprecation
-shims over the kind-generic fields (PR 2 callers keep working unchanged).
+shims over the kind-generic fields (PR 2 callers keep working unchanged,
+with a ``DeprecationWarning``).
+
+Wire bytes vs valid bytes
+-------------------------
+Ragged (v-collective) programs move *padded capacity* buffers over the
+wire: the HLO shapes — and therefore ``bytes``/``collective_bytes`` here —
+include the padding.  The padding is real wire traffic, but it must not
+inflate the *modeled* cost of the payload: ``analyze(...,
+valid_fractions={kind: fraction})`` scales each collective kind's bytes by
+the caller-supplied valid/padded ratio (known statically from the extents
+tables that built the program).  ``valid_collective_bytes`` /
+``coll_by_op_valid`` / ``exposed_collective_bytes`` then charge only valid
+payload; the unscaled wire numbers stay available for the exact
+HLO-vs-model cross-check.
 
 Everything is static text analysis of the compiled artifact — the "profile"
 available without hardware (see EXPERIMENTS.md §Roofline).
@@ -51,7 +65,8 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Iterable
+import warnings
+from typing import Iterable, Mapping
 
 __all__ = [
     "HloStats",
@@ -237,20 +252,46 @@ class CollectiveClass:
 
     computation: str
     var: str
-    bytes: int
+    bytes: int  # wire bytes (HLO result shape — includes ragged padding)
     mult: float
     classification: str  # 'overlapped' | 'serialized'
     kind: str = "collective-permute"  # one of _COLLECTIVES
     factor: int = 1  # per-kind byte factor (all-reduce x2), for exposed bytes
+    # valid payload bytes (wire bytes x the caller's valid/padded fraction);
+    # None = dense, valid == wire
+    valid_bytes: float | None = None
+
+    @property
+    def wire_bytes(self) -> int:
+        """HLO-shape bytes of one execution — what actually crosses the links."""
+        return self.bytes
+
+    @property
+    def payload_bytes(self) -> float:
+        """Valid (non-padding) bytes of one execution — what the cost model
+        charges; equals ``wire_bytes`` for dense programs."""
+        return self.bytes if self.valid_bytes is None else self.valid_bytes
 
     @property
     def exposed_bytes(self) -> float:
-        """Loop-multiplied wire bytes this op leaves on the critical path."""
-        return self.bytes * self.mult * self.factor if self.classification == "serialized" else 0.0
+        """Loop-multiplied *valid* bytes this op leaves on the critical path
+        (padding never inflates the modeled serialized cost)."""
+        if self.classification != "serialized":
+            return 0.0
+        return self.payload_bytes * self.mult * self.factor
 
 
 # deprecation shim: PR 2's permute-only verdict is the kind-generic one
 PermuteClass = CollectiveClass
+
+
+def _warn_permute_shim(name: str, replacement: str) -> None:
+    warnings.warn(
+        f"HloStats.{name} is a PR-2 deprecation shim; use the kind-generic "
+        f"{replacement} instead",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 class _OverlapAnalyzer:
@@ -410,8 +451,10 @@ class _OverlapAnalyzer:
 class HloStats:
     flops: float = 0.0
     bytes: float = 0.0
-    collective_bytes: float = 0.0
-    coll_by_op: dict = dataclasses.field(default_factory=dict)
+    collective_bytes: float = 0.0  # wire bytes (includes ragged padding)
+    valid_collective_bytes: float = 0.0  # payload bytes (valid_fractions applied)
+    coll_by_op: dict = dataclasses.field(default_factory=dict)  # wire, per kind
+    coll_by_op_valid: dict = dataclasses.field(default_factory=dict)  # payload
     dot_flops_by_mult: dict = dataclasses.field(default_factory=dict)
     loop_trip_counts: list = dataclasses.field(default_factory=list)
     collectives: list = dataclasses.field(default_factory=list)  # list[CollectiveClass]
@@ -427,31 +470,38 @@ class HloStats:
         return sum(1 for c in self.of_kind(kind) if c.classification == "serialized")
 
     def exposed_collective_bytes(self, kind: str | None = None) -> float:
-        """Loop-multiplied, factor-weighted bytes of the *serialized*
+        """Loop-multiplied, factor-weighted *valid* bytes of the serialized
         collectives — the traffic the scheduler cannot hide, i.e. the wire
-        time that stays exposed in the modeled step."""
+        time that stays exposed in the modeled step (ragged padding is
+        discounted via the ``valid_fractions`` passed to :func:`analyze`)."""
         return sum(c.exposed_bytes for c in self.of_kind(kind))
 
     def overlap_fraction(self, kind: str | None = None) -> float | None:
-        """Byte-weighted (loop-multiplied) fraction of collective traffic of
-        ``kind`` (all kinds when None) that is off the compute def-use chain;
-        None if the program has no such collectives."""
+        """Payload-byte-weighted (loop-multiplied) fraction of collective
+        traffic of ``kind`` (all kinds when None) that is off the compute
+        def-use chain; None if the program has no such collectives."""
         cs = self.of_kind(kind)
-        total = sum(c.bytes * c.mult * c.factor for c in cs)
+        total = sum(c.payload_bytes * c.mult * c.factor for c in cs)
         if not total:
             return None
-        good = sum(c.bytes * c.mult * c.factor for c in cs if c.classification == "overlapped")
+        good = sum(
+            c.payload_bytes * c.mult * c.factor for c in cs if c.classification == "overlapped"
+        )
         return good / total
 
     def overlap_by_kind(self) -> dict:
-        """Per-kind table: {kind: {overlapped, serialized, total_bytes,
-        exposed_bytes, overlap_fraction}} — the benchmark/CI artifact rows."""
+        """Per-kind table: {kind: {overlapped, serialized, total_bytes (wire),
+        valid_bytes, exposed_bytes, overlap_fraction}} — the benchmark/CI
+        artifact rows."""
         out: dict = {}
         for kind in sorted({c.kind for c in self.collectives}):
             out[kind] = {
                 "overlapped": self.collectives_overlapped(kind),
                 "serialized": self.collectives_serialized(kind),
                 "total_bytes": sum(c.bytes * c.mult * c.factor for c in self.of_kind(kind)),
+                "valid_bytes": sum(
+                    c.payload_bytes * c.mult * c.factor for c in self.of_kind(kind)
+                ),
                 "exposed_bytes": self.exposed_collective_bytes(kind),
                 "overlap_fraction": self.overlap_fraction(kind),
             }
@@ -461,22 +511,39 @@ class HloStats:
     @property
     def permutes(self) -> list:
         """PR 2 shim: the collective-permute subset of ``collectives``."""
+        _warn_permute_shim("permutes", 'of_kind("collective-permute")')
         return self.of_kind("collective-permute")
 
     @property
     def permutes_overlapped(self) -> int:
+        _warn_permute_shim("permutes_overlapped", 'collectives_overlapped("collective-permute")')
         return self.collectives_overlapped("collective-permute")
 
     @property
     def permutes_serialized(self) -> int:
+        _warn_permute_shim("permutes_serialized", 'collectives_serialized("collective-permute")')
         return self.collectives_serialized("collective-permute")
 
     @property
     def permute_overlap_fraction(self) -> float | None:
+        _warn_permute_shim("permute_overlap_fraction", 'overlap_fraction("collective-permute")')
         return self.overlap_fraction("collective-permute")
 
 
-def analyze(hlo_text: str) -> HloStats:
+def analyze(hlo_text: str, *, valid_fractions: Mapping[str, float] | None = None) -> HloStats:
+    """Walk optimized HLO into :class:`HloStats`.
+
+    ``valid_fractions`` maps a collective kind (e.g. ``"collective-permute"``)
+    to the valid/padded payload ratio of its transfers — known statically
+    from the extents tables of a ragged (v-collective) program.  Kinds
+    absent from the map count fully valid.
+    """
+    fractions = dict(valid_fractions or {})
+    for kind, f in fractions.items():
+        if kind not in _COLLECTIVES:
+            raise ValueError(f"valid_fractions: unknown collective kind {kind!r}")
+        if not 0.0 < f <= 1.0:
+            raise ValueError(f"valid_fractions[{kind!r}] = {f} not in (0, 1]")
     comps = _split_computations(hlo_text)
     entry_match = re.search(r"^ENTRY\s+(%[\w\.\-]+)", hlo_text, re.M)
     if entry_match is None:
@@ -538,12 +605,18 @@ def analyze(hlo_text: str) -> HloStats:
                 if op == coll or op == coll + "-done":
                     cb = _tensor_bytes(shape)
                     factor = 2 if coll == "all-reduce" else 1
+                    vb = cb * fractions[coll] if coll in fractions else None
                     stats.collective_bytes += mult * cb * factor
                     stats.coll_by_op[coll] = stats.coll_by_op.get(coll, 0.0) + mult * cb * factor
+                    payload = cb if vb is None else vb
+                    stats.valid_collective_bytes += mult * payload * factor
+                    stats.coll_by_op_valid[coll] = (
+                        stats.coll_by_op_valid.get(coll, 0.0) + mult * payload * factor
+                    )
                     stats.collectives.append(CollectiveClass(
                         computation=name, var=var, bytes=cb, mult=mult,
                         classification=overlap.classify(comp, var),
-                        kind=coll, factor=factor,
+                        kind=coll, factor=factor, valid_bytes=vb,
                     ))
                     break
                 if op == coll + "-start":
@@ -599,6 +672,12 @@ def classify_collectives(
 def classify_permutes(hlo_text: str) -> list[CollectiveClass]:
     """PR 2 shim: :func:`classify_collectives` restricted to
     ``collective-permute``."""
+    warnings.warn(
+        "classify_permutes is a PR-2 deprecation shim; use "
+        'classify_collectives(hlo, kinds=("collective-permute",)) instead',
+        DeprecationWarning,
+        stacklevel=2,
+    )
     return classify_collectives(hlo_text, kinds=("collective-permute",))
 
 

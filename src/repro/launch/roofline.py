@@ -4,7 +4,13 @@ Three terms per (arch x shape x mesh), in seconds:
 
     compute    = HLO_FLOPs  / (chips * peak_FLOPs)
     memory     = HLO_bytes  / (chips * HBM_bw)
-    collective = coll_bytes / (chips * link_bw)
+    collective = valid_coll_bytes / (chips * link_bw)
+
+``valid_coll_bytes`` distinguishes *wire* bytes from *valid* bytes: ragged
+(v-collective) programs move padded capacity buffers, and the padding must
+not inflate the modeled collective cost — pass ``valid_fractions`` (the
+static valid/padded ratios per kind) to discount it.  Dense programs are
+unchanged (valid == wire).
 
 plus the *exposed* collective term, which discounts traffic the
 ``hlo_walk`` def-use classifier statically proves overlappable (like the
@@ -108,16 +114,17 @@ class RooflineResult:
     chips: int
     hlo_flops: float
     hlo_bytes: float
-    coll_bytes: float
+    coll_bytes: float  # wire bytes (includes ragged padding)
     coll_by_op: dict
     model_flops: float
     t_compute: float
     t_memory: float
-    t_collective: float
+    t_collective: float  # valid-payload wire time (padding discounted)
     # static comm/compute-overlap evidence (hlo_walk def-use classification):
     # collectives off the compute chain can be hidden by the scheduler.  The
     # kind-generic fields cover every collective kind; the permute_* triple
-    # survives as the PR-2 deprecation shim (collective-permute only).
+    # survives as the PR-2 record-compat columns (collective-permute only;
+    # populated through the kind-generic API, not the deprecated shims).
     permutes_overlapped: int = 0
     permutes_serialized: int = 0
     permute_overlap_fraction: float | None = None
@@ -129,6 +136,10 @@ class RooflineResult:
     coll_exposed_bytes: float = 0.0
     t_collective_exposed: float = 0.0
     coll_overlap_by_kind: dict = dataclasses.field(default_factory=dict)
+    # valid payload bytes: equals coll_bytes for dense programs; for ragged
+    # (v-collective) programs, coll_bytes x the static valid fractions —
+    # padding rides the wire but never inflates the modeled cost terms
+    coll_valid_bytes: float = 0.0
 
     @property
     def dominant(self) -> str:
@@ -175,13 +186,20 @@ class RooflineResult:
 
 
 def roofline_report(*, arch: str, shape: str, mesh_name: str, chips: int,
-                    cost: dict, hlo_text: str, model_flops: float) -> RooflineResult:
+                    cost: dict, hlo_text: str, model_flops: float,
+                    valid_fractions: dict | None = None) -> RooflineResult:
     """All quantities are per-device/per-step, from the loop-aware HLO walk
     (``hlo_walk.analyze``); ``cost_analysis`` values are recorded upstream as
-    a cross-check only (they undercount scan loops)."""
+    a cross-check only (they undercount scan loops).
+
+    ``valid_fractions`` (per collective kind) discounts ragged padding: the
+    modeled collective terms (``t_collective``, ``t_collective_exposed``)
+    charge valid payload only, while ``coll_bytes`` keeps the exact wire
+    figure for the HLO-vs-model cross-check.
+    """
     from . import hlo_walk
 
-    st = hlo_walk.analyze(hlo_text)
+    st = hlo_walk.analyze(hlo_text, valid_fractions=valid_fractions)
     exposed = st.exposed_collective_bytes()
     return RooflineResult(
         arch=arch,
@@ -195,14 +213,15 @@ def roofline_report(*, arch: str, shape: str, mesh_name: str, chips: int,
         model_flops=model_flops,
         t_compute=st.flops / HW["peak_flops"],
         t_memory=st.bytes / HW["hbm_bw"],
-        t_collective=st.collective_bytes / HW["link_bw"],
-        permutes_overlapped=st.permutes_overlapped,
-        permutes_serialized=st.permutes_serialized,
-        permute_overlap_fraction=st.permute_overlap_fraction,
+        t_collective=st.valid_collective_bytes / HW["link_bw"],
+        permutes_overlapped=st.collectives_overlapped("collective-permute"),
+        permutes_serialized=st.collectives_serialized("collective-permute"),
+        permute_overlap_fraction=st.overlap_fraction("collective-permute"),
         collectives_overlapped=st.collectives_overlapped(),
         collectives_serialized=st.collectives_serialized(),
         collective_overlap_fraction=st.overlap_fraction(),
         coll_exposed_bytes=exposed,
         t_collective_exposed=exposed / HW["link_bw"],
         coll_overlap_by_kind=st.overlap_by_kind(),
+        coll_valid_bytes=st.valid_collective_bytes,
     )

@@ -88,7 +88,8 @@ def attention_seq(q, k, v, *, causal: bool = True, impl: str | None = None, bloc
 
 # ------------------------------------------------------- ring attention ----
 
-def _ring_attention_local(q, k, v, *, axis_name: str, causal: bool, double_buffer: bool):
+def _ring_attention_local(q, k, v, *, axis_name: str, causal: bool, double_buffer: bool,
+                          valid_len: int | None = None):
     """Per-device body of the sequence-parallel attention ring.
 
     ``q`` (B,H,Sl,D) and ``k``/``v`` (B,G,Sl,D) are the *local* seq chunks of
@@ -103,6 +104,13 @@ def _ring_attention_local(q, k, v, *, axis_name: str, causal: bool, double_buffe
     double-buffered SUMMA ring issues its panel rotation before the local
     GEMM.  ``double_buffer=False`` keeps the blocking formulation (compute,
     then rotate) — numerically bit-identical, the reference variant.
+
+    ``valid_len`` enables *ragged* sequence shards (S % R != 0): the global
+    sequence is padded to R * Sl and positions >= valid_len are masked out
+    of every score block — the zero-padded KV rides the ring at capacity
+    (uniform wire datatype, like every ragged DistBag transfer) while the
+    online-softmax only ever normalizes over valid keys.  Rows beyond
+    valid_len are garbage and sliced off by the caller.
     """
     R = jax.lax.psum(1, axis_name)  # static ring size
     me = jax.lax.axis_index(axis_name)
@@ -130,8 +138,14 @@ def _ring_attention_local(q, k, v, *, axis_name: str, causal: bool, double_buffe
         k_pos = ((me - s) % R) * Sl + jnp.arange(Sl)
         sc = jnp.einsum("bgrqd,bgkd->bgrqk", qg, kb,
                         preferred_element_type=jnp.float32) * scale
+        mask = None
         if causal:
-            sc = jnp.where((q_pos[:, None] >= k_pos[None, :])[None, None, None], sc, -1e30)
+            mask = q_pos[:, None] >= k_pos[None, :]
+        if valid_len is not None:
+            pad_mask = k_pos[None, :] < valid_len
+            mask = pad_mask if mask is None else (mask & pad_mask)
+        if mask is not None:
+            sc = jnp.where(mask[None, None, None], sc, -1e30)
         m_new = jnp.maximum(m, sc.max(axis=-1))
         p = jnp.exp(sc - m_new[..., None])
         corr = jnp.exp(m - m_new)
@@ -156,13 +170,30 @@ def ring_attention_seq(q, k, v, *, mesh, axis_name: str = "model", q_spec=None,
     overlaps the local math (see :func:`_ring_attention_local`).  ``q_spec``
     / ``kv_spec`` default to seq-sharded-over-``axis_name`` with everything
     else replicated; pass the recipe's specs to keep batch dims sharded.
+
+    Sequence lengths that do NOT divide the ring run as *ragged* seq shards
+    (:func:`repro.models.sharding.ragged_seq_extents`): the sequence is
+    zero-padded to R equal capacity chunks — the trailing ranks hold short
+    (possibly empty) valid blocks — the padded key positions are masked out
+    of every score, and the padded output rows are sliced off.  The wire
+    still moves uniform capacity blocks, exactly like every ragged DistBag
+    transfer.
     """
     from jax.sharding import PartitionSpec as P
 
+    from .sharding import ragged_seq_extents
+
     R = mesh.shape[axis_name]
-    if q.shape[2] % R or k.shape[2] % R:
-        raise ValueError(f"ring attention needs seq {q.shape[2]} divisible by "
-                         f"mesh axis {axis_name!r} (size {R})")
+    S = q.shape[2]
+    if k.shape[2] != S:
+        raise ValueError(f"ring attention needs matching q/kv seq lens, got {S} vs {k.shape[2]}")
+    valid_len = None
+    if S % R:
+        cap, _ = ragged_seq_extents(S, R)
+        Sp = R * cap
+        pad = [(0, 0), (0, 0), (0, Sp - S), (0, 0)]
+        q, k, v = (jnp.pad(x, pad) for x in (q, k, v))
+        valid_len = S
     if q_spec is None:
         q_spec = P(None, None, axis_name, None)
     if kv_spec is None:
@@ -172,22 +203,25 @@ def ring_attention_seq(q, k, v, *, mesh, axis_name: str = "model", q_spec=None,
 
     def body(ql, kl, vl):
         return _ring_attention_local(ql, kl, vl, axis_name=axis_name,
-                                     causal=causal, double_buffer=double_buffer)
+                                     causal=causal, double_buffer=double_buffer,
+                                     valid_len=valid_len)
 
-    return shard_map(body, mesh=mesh, in_specs=(q_spec, kv_spec, kv_spec),
-                     out_specs=q_spec)(q, k, v)
+    out = shard_map(body, mesh=mesh, in_specs=(q_spec, kv_spec, kv_spec),
+                    out_specs=q_spec)(q, k, v)
+    return out[:, :, :S] if valid_len is not None else out
 
 
 def _ring_applicable(recipe, q, k) -> bool:
-    """The sp ring runs when the recipe asks for it and the shapes ring:
-    a >1-sized model axis whose size divides the seq dim."""
+    """The sp ring runs when the recipe asks for it and the shapes ring: a
+    >1-sized model axis.  Seq lengths that don't divide the ring are fine —
+    they run as ragged shards (padded capacity chunks + masked scores)."""
     if recipe is None or not getattr(recipe, "sp_ring", False) or recipe.attn_mode != "sp":
         return False
     if "model" not in recipe.mesh.shape:
         return False
     R = recipe.mesh.shape["model"]
     S = q.shape[2]
-    return R > 1 and S % R == 0 and k.shape[2] == S and q.shape[1] % k.shape[1] == 0
+    return R > 1 and S >= 1 and k.shape[2] == S and q.shape[1] % k.shape[1] == 0
 
 
 def attention_decode(q, k_cache, v_cache, cache_len):

@@ -31,7 +31,14 @@ rotation off the compute def-use chain (0 serialized collectives:
 ``python -m repro.launch.dryrun --sp-ring``).  Recipe-wise it is plain
 ``sp`` plus ``Recipe.sp_ring=True``; use it when S is long enough that
 the all-gather dominates (S/R per-step blocks amortize behind the local
-attention math) and S % model == 0.
+attention math).
+
+Sequence lengths need NOT divide the ring: ``S % model != 0`` runs as
+*ragged* seq shards (:func:`ragged_seq_extents`) — the sequence pads to R
+equal capacity chunks (trailing ranks hold short valid blocks, the MPI
+``Scatterv``-counts picture), padded key positions are masked out of the
+online softmax, and the padded output rows are sliced off.  The wire moves
+uniform capacity blocks, so the double-buffered overlap proof is unchanged.
 
 Activation constraints are applied through a context (``use_recipe``) so
 model code stays mesh-free; ``shard_act(x, kind)`` is a no-op outside it.
@@ -45,7 +52,27 @@ from typing import Any, Mapping
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["Recipe", "make_recipe", "use_recipe", "shard_act", "current_recipe"]
+__all__ = ["Recipe", "make_recipe", "use_recipe", "shard_act", "current_recipe",
+           "ragged_seq_extents"]
+
+
+def ragged_seq_extents(S: int, R: int) -> tuple[int, tuple[int, ...]]:
+    """Ragged sequence shards for an R-rank ring: ``(capacity, extents)``.
+
+    Contiguous ceil-split (rank ``r`` owns positions ``[r*cap, min((r+1)*cap,
+    S))``): all leading ranks hold full capacity chunks and only the trailing
+    ranks are short — possibly empty when ``S < R * cap`` leaves nothing.
+    This is the seq-dim analogue of the v-collective counts tables (the
+    balanced :func:`repro.core.dims.ragged_split` is used for matrix tiles,
+    where empty blocks are forbidden; a ring step against an empty KV block
+    is just a fully-masked score block, so empties are fine here).
+    """
+    if R <= 0 or S <= 0:
+        raise ValueError(f"ragged_seq_extents({S}, {R}): sizes must be positive")
+    from repro.core.dims import ceil_div
+
+    cap = ceil_div(S, R)
+    return cap, tuple(max(0, min(cap, S - r * cap)) for r in range(R))
 
 # priority for param-dim conflicts (earlier wins a contested mesh axis)
 PRIORITY = ["e", "v", "f", "h", "a", "i", "c", "g", "q", "k", "m", "l"]

@@ -4,8 +4,9 @@ with differing endpoint layouts, on 1-D communicators and 2-D grids."""
 
 def test_send_recv_differing_endpoint_layouts(distributed):
     """Rank 2's tile arrives at rank 5 with a row-major wire datatype (the
-    receiver's declared layout); the result bag stays homogeneous in the
-    source layout and every rank's tile is logically correct."""
+    receiver's declared layout); the receiver KEEPS that layout — the result
+    bag records it per-rank in ``tile_layouts`` — and every rank's tile is
+    logically correct."""
     out = distributed(
         """
 import numpy as np, jax, jax.numpy as jnp
@@ -22,7 +23,14 @@ dst_tile = scalar(np.float32) ^ vector('j', M//8) ^ vector('i', N)   # row-major
 dt = mpi_traverser('R', traverser(root), mesh)
 db = scatter(root, src_tile, dt)
 out = send_recv(db, src=2, dst=5, dst_tile_layout=dst_tile)
-assert out.tile_layout is db.tile_layout  # homogeneous bag: source layout
+assert out.tile_layout is db.tile_layout  # the homogeneous capacity layout
+# the receiver keeps its declared heterogeneous layout...
+assert out.tile_layouts is not None
+assert out.tile_layouts[5] is dst_tile
+assert out.tile(5).layout is dst_tile
+# ...holding the received bytes exactly as the relayout would pack them
+want5 = db.tile(2).to_layout(dst_tile)
+assert np.array_equal(np.asarray(out.tile(5).data), np.asarray(want5.data))
 for r in range(8):
     want = db.tile(2 if r == 5 else r)
     got = out.tile(r)
@@ -59,10 +67,16 @@ assert out.tile_layout is db.tile_layout
 for r in range(8):
     if r == 6:
         continue
-    # bit-identical raw buffers: no relayout round-trip was applied
+    # bit-identical raw buffers: no relayout round-trip was applied, and the
+    # bystanders stay in the SOURCE layout (tile_layouts only names dst)
+    assert out.tile(r).layout is db.tile_layout, r
     assert np.array_equal(np.asarray(out.tile(r).data), np.asarray(db.tile(r).data)), r
-# the receiver's slot holds src's tile, unpacked into the source layout
-assert np.array_equal(np.asarray(out.tile(6).data), np.asarray(db.tile(1).data))
+# the receiver keeps its declared (transposed) wire layout — the received
+# buffer holds src's tile packed into it, no unpack back to the source layout
+got6 = out.tile(6)
+assert got6.layout is dst_tile
+assert np.array_equal(np.asarray(got6.data),
+                      np.asarray(db.tile(1).to_layout(dst_tile).data))
 print('OK')
 """
     )

@@ -19,7 +19,9 @@ bytes only.  The SUMMA rows report the measured kind-generic overlap
 classification of the compiled ring — ``overlapped/total`` collectives per
 kind (ring permutes AND the reduce-scatter epilogue) off the compute
 def-use chain, plus the exposed (serialized) bytes that stay on it
-(measured once per dataset; the classification is majors-independent)."""
+(measured once per dataset; the classification is majors-independent), and
+the program's declared comm-plan intent (``plan_intent``) with whether the
+HLO-proven verdict agrees (``plan_agree``)."""
 import json
 import os
 import subprocess
@@ -76,7 +78,7 @@ for dataset in {datasets!r}:
                 C, ref = fn(ni, nj, nk, majors)
                 times.append(_t.perf_counter() - t0)
             np.testing.assert_allclose(C, ref, rtol=1e-3, atol=1e-3)
-            overlap, by_kind, exposed = "-", "-", ""
+            overlap, by_kind, exposed, plan_intent, plan_agree = "-", "-", "", "-", "-"
             if algo in ("summa2d", "summa2d_ragged"):
                 if algo not in overlap_cells:  # once per dataset: majors-independent
                     if algo == "summa2d":
@@ -92,15 +94,18 @@ for dataset in {datasets!r}:
                         "%s:%d/%d" % (k, row["overlapped"], row["overlapped"] + row["serialized"])
                         for k, row in sorted(st.overlap_by_kind().items()))
                     n_perm = len(st.of_kind("collective-permute"))
+                    agree = hlo_walk.plan_agreement(st, meta["plan_intent"])
                     overlap_cells[algo] = (
                         "%d/%d" % (st.collectives_overlapped("collective-permute"), n_perm),
-                        kinds, "%g" % st.exposed_collective_bytes())
-                overlap, by_kind, exposed = overlap_cells[algo]
+                        kinds, "%g" % st.exposed_collective_bytes(),
+                        meta["plan_intent"], "yes" if agree["agree"] else "NO")
+                overlap, by_kind, exposed, plan_intent, plan_agree = overlap_cells[algo]
             results.append(dict(dataset=dataset, algo=algo, majors=majors,
                                 mean_s=float(np.mean(times)), std_s=float(np.std(times)),
                                 model_valid_bytes=valid_b, model_padded_bytes=padded_b,
                                 overlap=overlap,
-                                overlap_by_kind=by_kind, exposed_bytes=exposed))
+                                overlap_by_kind=by_kind, exposed_bytes=exposed,
+                                plan_intent=plan_intent, plan_agree=plan_agree))
 print("RESULTS_JSON=" + json.dumps(results))
 """
 
@@ -119,11 +124,13 @@ def run(datasets=("MINI", "EXTRALARGE"), reps=3,
     line = [l for l in proc.stdout.splitlines() if l.startswith("RESULTS_JSON=")][0]
     results = json.loads(line[len("RESULTS_JSON="):])
     out = ["dataset,algo,majors,us_per_call,std_us,model_valid_bytes,"
-           "model_padded_bytes,overlap,overlap_by_kind,exposed_bytes"]
+           "model_padded_bytes,overlap,overlap_by_kind,exposed_bytes,"
+           "plan_intent,plan_agree"]
     for r in results:
         out.append(f"{r['dataset']},{r['algo']},{r['majors']},{r['mean_s']*1e6:.0f},"
                    f"{r['std_s']*1e6:.0f},{r['model_valid_bytes']},{r['model_padded_bytes']},"
-                   f"{r['overlap']},{r['overlap_by_kind']},{r['exposed_bytes']}")
+                   f"{r['overlap']},{r['overlap_by_kind']},{r['exposed_bytes']},"
+                   f"{r['plan_intent']},{r['plan_agree']}")
     return out
 
 

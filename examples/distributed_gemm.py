@@ -58,6 +58,7 @@ import numpy as np
 from repro.core import (
     DistBag,
     bag,
+    intent_of,
     broadcast,
     dist_full,
     dist_sharding,
@@ -71,7 +72,7 @@ from repro.core import (
     rank_map,
     reduce_scatter_bag,
     reduce_scatterv_bag,
-    ring_shift,
+    ring,
     ring_shift_start,
     scatter,
     scatterv_bag,
@@ -221,12 +222,15 @@ def summa_ring_program(*, ni: int, nj: int, nk: int, grid: tuple[int, int] = (2,
     stacked C tiles; ``meta`` carries the mesh, traversers, tile layouts,
     abstract arguments for dry-run lowering, and the analytic comm model.
 
-    With ``double_buffer=True`` each step issues the panel rotation with the
-    non-blocking ``ring_shift_start`` *before* the local GEMM and waits after
-    it — the transfer is off the def-use chain between consecutive GEMMs, so
+    The schedule is a declared comm plan (:func:`repro.core.ring`): the
+    planner issues each step's panel rotation with the non-blocking
+    ``ring_shift_start`` *before* the local GEMM and waits after it — the
+    transfer is off the def-use chain between consecutive GEMMs, so
     ``hlo_walk.analyze`` classifies every ring ``collective-permute`` as
-    overlapped.  With ``double_buffer=False`` the blocking formulation is
-    kept (GEMM, then ``ring_shift``) — numerically bit-identical.
+    overlapped, and ``meta["plan_intent"]`` records the declared intent the
+    dry-run gates verify.  With ``double_buffer=False`` the planner starts
+    and waits back-to-back (the blocking interpretation) — numerically
+    bit-identical by construction.
     """
     c_major, a_major, b_major = majors.upper().split("/")
     R, Cc = grid
@@ -255,30 +259,30 @@ def summa_ring_program(*, ni: int, nj: int, nk: int, grid: tuple[int, int] = (2,
         A_dist = DistBag(a_data, A_tile, dtA, ("Ri", "Ck"))
         B_cur = DistBag(b_data, B_tile, dtB, ("Rj", "Ck"))
         P = dist_full(dtA, P_l)
-        for s in range(R):
-            pend = None
-            if double_buffer and s < R - 1:
-                # MPI_Isend/Irecv analogue: issue step s's rotation before the
-                # local multiply so the transfer overlaps the compute
-                pend = ring_shift_start(B_cur, -1, rank_dim="Rj")
 
-            def step(state, p, a, b_panel, _s=s):
+        def compute(p, b_cur, s):
+            def step(state, p_, a, b_panel, _s=s):
                 # per-rank layout-parametric GEMM (paper's kernel, Pallas on
                 # TPU) accumulating into the rotating j-block of the panel
                 jb = (state["Ri"] + _s) % R
-                new = ops.gemm_panel(a.data, b_panel.data, p.data, jb, majors=local_majors)
-                return p.with_data(new)
+                new = ops.gemm_panel(a.data, b_panel.data, p_.data, jb, majors=local_majors)
+                return p_.with_data(new)
 
-            P = rank_map(step, dtA, P, A_dist, B_cur, out_tile_layout=P_l)
-            if s < R - 1:  # rotate B panels one hop up the rows ring (p2p §4.3)
-                if double_buffer:
-                    B_cur = pend.wait()  # MPI_Wait: completion point
-                else:
-                    B_cur = ring_shift(B_cur, -1, rank_dim="Rj")
-        # epilogue: sum partials over k (grid cols) and scatter j, landing
-        # each rank's C tile directly in its chosen layout
-        C_grid = reduce_scatter_bag(P, C_tile, scatter_dim="j", rank_dim="Ck")
-        return C_grid.data
+            return rank_map(step, dtA, p, A_dist, b_cur, out_tile_layout=P_l)
+
+        # the schedule is declared once: the planner issues each step's
+        # rotation (MPI_Start analogue) before the local GEMM and waits after
+        # it, and the epilogue sums partials over k (grid cols) and scatters
+        # j, landing each rank's C tile directly in its chosen layout
+        plan = ring(
+            R,
+            transfer=lambda b_cur, s: ring_shift_start(b_cur, -1, rank_dim="Rj"),
+            compute=compute,
+            epilogue=lambda p, b_cur: reduce_scatter_bag(
+                p, C_tile, scatter_dim="j", rank_dim="Ck"
+            ).data,
+        )
+        return plan.run(B_cur, P, double_buffer=double_buffer)
 
     shA = dist_sharding(dtA, A_tile)
     shB = dist_sharding(dtB, B_tile)
@@ -288,6 +292,7 @@ def summa_ring_program(*, ni: int, nj: int, nk: int, grid: tuple[int, int] = (2,
         A_layout=A_layout, B_layout=B_layout,
         A_root_l=A_root_l, B_root_l=B_root_l,
         A_tile=A_tile, B_tile=B_tile, C_tile=C_tile, panel_layout=P_l,
+        plan_intent=intent_of("ring"),
         abstract_args=(
             jax.ShapeDtypeStruct((R, Cc) + A_tile.shape, A_tile.dtype),
             jax.ShapeDtypeStruct((R, Cc) + B_tile.shape, B_tile.dtype),
@@ -415,34 +420,33 @@ def ragged_summa_program(*, ni: int, nj: int, nk: int, grid: tuple[int, int] = (
         A_dist = DistBag(a_data, A_tile, dtA, ("Ri", "Ck"), extents=extA)
         B_cur = DistBag(b_data, B_tile, dtB, ("Rj", "Ck"), extents=extB)
         P = dist_full(dtA, P_l)
-        for s in range(R):
-            pend = None
-            if double_buffer and s < R - 1:
-                # MPI_Isend/Irecv analogue; the extents table rotates with
-                # the panels, so the next step's valid region is known
-                pend = ring_shift_start(B_cur, -1, rank_dim="Rj")
 
-            def step(state, p, a, b_panel, _s=s):
+        def compute(p, b_cur, s):
+            def step(state, p_, a, b_panel, _s=s):
                 # padded capacity GEMM: zero padding in A's i/k and the
                 # panel's k/j contributes zeros, so the accumulation into the
                 # rotating j-block stays exact without masks
                 jb = (state["Ri"] + _s) % R
-                new = ops.gemm_panel(a.data, b_panel.data, p.data, jb, majors=local_majors)
-                return p.with_data(new)
+                new = ops.gemm_panel(a.data, b_panel.data, p_.data, jb, majors=local_majors)
+                return p_.with_data(new)
 
-            P = rank_map(step, dtA, P, A_dist, B_cur, out_tile_layout=P_l,
-                         out_extents=extP)
-            if s < R - 1:
-                if double_buffer:
-                    B_cur = pend.wait()  # MPI_Wait: completion point
-                else:
-                    B_cur = ring_shift(B_cur, -1, rank_dim="Rj")
-        # ragged epilogue: compact the R block-ragged j slabs, re-pad into Cc
-        # ragged output blocks, reduce over k (grid cols) and scatter j
-        C_grid = reduce_scatterv_bag(P, C_tile, scatter_dim="j",
-                                     in_blocks=(cap_jr, ejr), out_extents=ejc,
-                                     rank_dim="Ck")
-        return C_grid.data
+            return rank_map(step, dtA, p, A_dist, b_cur, out_tile_layout=P_l,
+                            out_extents=extP)
+
+        # same declared schedule as the dense SUMMA — the extents table
+        # rotates with the panels inside the planner's transfers, and the
+        # ragged epilogue compacts the R block-ragged j slabs, re-pads into
+        # Cc ragged output blocks, reduces over k (grid cols) and scatters j
+        plan = ring(
+            R,
+            transfer=lambda b_cur, s: ring_shift_start(b_cur, -1, rank_dim="Rj"),
+            compute=compute,
+            epilogue=lambda p, b_cur: reduce_scatterv_bag(
+                p, C_tile, scatter_dim="j", in_blocks=(cap_jr, ejr),
+                out_extents=ejc, rank_dim="Ck"
+            ).data,
+        )
+        return plan.run(B_cur, P, double_buffer=double_buffer)
 
     shA = dist_sharding(dtA, A_tile)
     shB = dist_sharding(dtB, B_tile)
@@ -456,6 +460,7 @@ def ragged_summa_program(*, ni: int, nj: int, nk: int, grid: tuple[int, int] = (
         A_ragged={"Ri": ("i", ei), "Ck": ("k", ek)},
         B_ragged={"Rj": ("j", ejr), "Ck": ("k", ek)},
         C_extents=grid_extents(dtA, ("Ri", "Ck"), {"Ri": ("i", ei), "Ck": ("j", ejc)}),
+        plan_intent=intent_of("ring"),
         abstract_args=(
             jax.ShapeDtypeStruct((R, Cc) + A_tile.shape, A_tile.dtype),
             jax.ShapeDtypeStruct((R, Cc) + B_tile.shape, B_tile.dtype),

@@ -53,6 +53,15 @@ MPI                     repro.core
 The non-blocking twins share the dense collectives'
 ``_issue_*``/:class:`Pending` request layer; blocking = ``_start().wait()``
 by construction.
+
+Comm plans
+----------
+:mod:`repro.core.plan` lifts the request layer one level up: an algorithm
+declares its communication schedule once (:func:`ring` / :func:`halo` /
+:func:`pipeline` — the MPI persistent-request / ``MPI_Start`` pattern) and
+the planner emits the double-buffered program with a bit-identical blocking
+interpretation.  Each plan carries a declared overlap intent that
+``repro.launch.hlo_walk.plan_agreement`` verifies against the compiled HLO.
 """
 from .compat import make_mesh, shard_map
 from .dims import LayoutError, ceil_div, common_refinement, ragged_split
@@ -110,10 +119,12 @@ from .collectives import (
     all_to_allv_start,
     reduce_scatterv_bag,
     reduce_scatterv_start,
+    reduce_identity,
     dist_full,
     dist_sharding,
     rank_map,
 )
+from .plan import CommPlan, halo, intent_of, pipeline, ring
 from .p2p import (
     PendingTile,
     permute,
@@ -188,12 +199,18 @@ __all__ = [
     "all_to_allv_start",
     "reduce_scatterv_bag",
     "reduce_scatterv_start",
+    "reduce_identity",
     "dist_full",
     "dist_sharding",
     "rank_map",
     "DistBag",
     "Pending",
     "wait_all",
+    "CommPlan",
+    "ring",
+    "halo",
+    "pipeline",
+    "intent_of",
     "send_recv",
     "permute",
     "ring_shift",

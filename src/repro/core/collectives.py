@@ -75,6 +75,7 @@ from typing import Any, Callable, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .bag import Bag
@@ -111,6 +112,7 @@ __all__ = [
     "all_to_allv_start",
     "reduce_scatterv_bag",
     "reduce_scatterv_start",
+    "reduce_identity",
     "dist_full",
     "dist_sharding",
     "rank_map",
@@ -122,6 +124,25 @@ _REDUCERS = {
     "max": jax.lax.pmax,
     "min": jax.lax.pmin,
 }
+
+
+def reduce_identity(op: str, dtype):
+    """The identity element of reduce op ``op`` for ``dtype`` — the value
+    padding must carry so it never enters a reduction's result: 0 for
+    ``add``/``mean``, ``-inf``/``+inf`` (or the integer extremes) for
+    ``max``/``min``.  Zero padding is *only* the identity of add/mean;
+    capacity fill for a max/min pipeline should use this instead
+    (``scatterv_bag(..., pad_value=reduce_identity(op, dtype))``)."""
+    _resolve_reduce(op)
+    dt = np.dtype(dtype)
+    if op in ("add", "mean"):
+        return dt.type(0)
+    if dt.kind == "f":
+        return dt.type(-np.inf if op == "max" else np.inf)
+    if dt.kind in "iu":
+        info = np.iinfo(dt)
+        return dt.type(info.min if op == "max" else info.max)
+    raise LayoutError(f"reduce_identity: no {op!r} identity for dtype {dt}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -862,10 +883,12 @@ def _issue_reduce_scatter(
             if op == "mean":
                 y = y / R
         else:
-            red = _REDUCERS[op](x, axes)
-            y = jax.lax.dynamic_index_in_dim(
-                red, _flat_rank(dist.dt, rank_dim), axis=0, keepdims=False
-            )
+            # direct psum_scatter-style route for max/min: exchange the R
+            # stacked blocks so each rank holds every contribution of its
+            # own block, then reduce locally — 1/R the wire bytes of the
+            # old allreduce-then-slice form.
+            y = jax.lax.all_to_all(x, axes, split_axis=0, concat_axis=0, tiled=False)
+            y = (jnp.max if op == "max" else jnp.min)(y, axis=0)
         return y
 
     return _shard_collective(dist, out_tile_layout, tile_fn)
@@ -1079,6 +1102,8 @@ def scatterv_bag(
     dt: DistTraverser,
     ragged: Mapping[str, tuple[str, Sequence[int]]],
     rank_dim: str | Sequence[str] | None = None,
+    *,
+    pad_value=0,
 ) -> DistBag:
     """``MPI_Scatterv``: scatter ``root`` into per-rank *ragged* tiles.
 
@@ -1091,6 +1116,11 @@ def scatterv_bag(
     padding behind it, relayouted from any root layout exactly like
     :func:`scatter`.  The result carries the extents table, so downstream
     collectives and :meth:`DistBag.tile` stay padding-free.
+
+    ``pad_value`` is the capacity-fill value (default 0, the add/mean
+    identity).  Tiles feeding a local ``max``/``min`` over a ragged dim
+    should fill with that op's identity instead:
+    ``pad_value=reduce_identity(op, dtype)``.
     """
     rank_dims = _as_rank_dims(dt, rank_dim)
     ragged = dict(ragged)
@@ -1112,7 +1142,7 @@ def scatterv_bag(
             shrunk_tile = shrunk_tile.resize_dim(dim, exts[c])
         chunk = relayout(arr[tuple(slicer)], shrunk_canon, shrunk_tile)
         pad = [(0, full - cur) for full, cur in zip(tile_layout.shape, shrunk_tile.shape)]
-        tiles.append(jnp.pad(chunk, pad))
+        tiles.append(jnp.pad(chunk, pad, constant_values=pad_value))
     data = jnp.stack(tiles).reshape(lead + tile_layout.shape)
     sharding = NamedSharding(dt.mesh, _grid_spec(dt, rank_dims, tile_layout.ndim))
     data = jax.device_put(data, sharding)
@@ -1166,32 +1196,76 @@ def gatherv_bag(dist: DistBag, root_layout: Layout) -> Bag:
     return Bag(res, root_layout)
 
 
+def _gatherv_cat_dim(dist: DistBag, pos: int, root_space: Mapping[str, int], what: str) -> str:
+    """The ragged dim whose extents the rank dim at grid position ``pos``
+    tiles (per-sub-communicator counts): candidates from separability,
+    disambiguated by the root-space sum and by unique ownership."""
+    cands = _ragged_owner_candidates(dist)
+    matches = [
+        d
+        for d, ps in cands.items()
+        if pos in ps and sum(_dim_extent_list(dist, d, pos)) == root_space.get(d)
+    ]
+    if len(matches) > 1:
+        unique = [d for d in matches if cands[d] == [pos]]
+        matches = unique or matches
+    if len(matches) != 1:
+        raise LayoutError(
+            f"{what}: cannot identify the ragged dim tiled by rank dim "
+            f"{dist.rank_dims[pos]!r} (candidates: {sorted(matches)} of "
+            f"ragged dims {sorted(cands)})"
+        )
+    return matches[0]
+
+
 def _issue_all_gatherv(dist: DistBag, root_layout: Layout, rank_dims: Sequence[str]) -> DistBag:
     """Issue the true on-device all-gather of ragged tiles (shared by the
     blocking and non-blocking entry points): the padded capacity tiles move
     over the wire (uniform datatype), and the static per-rank extents drive
     the valid-slice concatenation *inside* the same XLA program — the
     ``MPI_Allgatherv`` whose recvcounts/displs are compile-time constants.
+
+    On a communicator grid the gather runs along one named rank dim; the
+    other grid dims act as independent sub-communicators
+    (``MPI_Comm_split``), the per-sub-communicator counts coming from the
+    grid extents table.  Dims tiled by the *other* rank dims stay ragged at
+    capacity in the result and keep their extents.
     """
     dt = dist.dt
     if dist.extents is None:
         raise LayoutError("all_gatherv: bag is dense (no extents); use all_gather_*")
-    if len(rank_dims) != 1 or len(dist.rank_dims) != 1:
-        raise LayoutError("all_gatherv currently needs a 1-D communicator")
-    (rd,) = rank_dims
-    owners = _ragged_owners(dist)
-    if len(owners) != 1:
+    if len(rank_dims) != 1:
         raise LayoutError(
-            f"all_gatherv: exactly one ragged (concatenation) dim expected, got {sorted(owners)}"
+            "all_gatherv gathers along one rank dim per call; name it "
+            f"explicitly on the grid {dist.rank_dims}"
         )
-    ((cat_dim, pos),) = owners.items()
+    (rd,) = rank_dims
+    pos = dist.rank_dims.index(rd)
+    root_space = root_layout.index_space()
+    cat_dim = _gatherv_cat_dim(dist, pos, root_space, "all_gatherv")
     exts = _dim_extent_list(dist, cat_dim, pos)
     R = dt.comm_size(rd)
     total = sum(exts)
+    # dims tiled by the other grid dims ride through at capacity; their
+    # extents must not vary along ``rd`` (separability guarantees the slice
+    # sizes are uniform inside every sub-communicator)
+    other_ragged = tuple(d for d in dist.ragged_dims() if d != cat_dim)
+    if other_ragged:
+        _uniform_extents_along(
+            dataclasses.replace(
+                dist,
+                extents=tuple(
+                    tuple(p for p in entry if p[0] != cat_dim) for entry in dist.extents
+                ),
+            ),
+            rd,
+            "all_gatherv (other ragged dims)",
+        )
     expected = dict(dist.tile_layout.index_space())
     expected[cat_dim] = total
     check_same_space(root_layout.index_space(), expected, what="all_gatherv(root, sum of tiles)")
     check_ragged_dims(dist.tile_layout, dist.tile_layout, (cat_dim,), what="all_gatherv")
+    check_ragged_dims(root_layout, root_layout, other_ragged, what="all_gatherv(out)")
     ax = dist.tile_layout.axis_index(dist.tile_layout.dim_axes(cat_dim)[0])
     full_l = dist.tile_layout.resize_dim(cat_dim, total)
     axes = tuple(dt.rank_mesh_axes(rd))
@@ -1202,7 +1276,13 @@ def _issue_all_gatherv(dist: DistBag, root_layout: Layout, rank_dims: Sequence[s
         full = jnp.concatenate(parts, axis=ax)
         return relayout(full, full_l, root_layout)
 
-    return _shard_collective(dist, root_layout, tile_fn)
+    out = _shard_collective(dist, root_layout, tile_fn)
+    if other_ragged:
+        new_ext = tuple(
+            tuple(p for p in entry if p[0] != cat_dim) for entry in dist.extents
+        )
+        out = dataclasses.replace(out, extents=new_ext)
+    return out
 
 
 def all_gatherv_start(
@@ -1230,8 +1310,25 @@ def all_gatherv_dist(
 def all_gatherv_bag(dist: DistBag, root_layout: Layout) -> Bag:
     """``MPI_Allgatherv``: every rank ends with the full structure — the
     ragged tiles' valid regions concatenated in rank order — in
-    ``root_layout``, via the true on-device all-gather."""
-    db = all_gatherv_dist(dist, root_layout)
+    ``root_layout``, via the true on-device all-gather.
+
+    On a communicator grid this gathers along every rank dim in turn (one
+    sub-communicator all-gather per grid dim, like a dimension-ordered
+    ``MPI_Allgatherv`` over a Cartesian communicator), so each grid dim
+    must tile its own ragged dim."""
+    root_space = root_layout.index_space()
+    db = dist
+    for i, rd in enumerate(dist.rank_dims):
+        last = i == len(dist.rank_dims) - 1
+        if last:
+            target = root_layout
+        else:
+            pos = db.rank_dims.index(rd)
+            cat_dim = _gatherv_cat_dim(db, pos, root_space, "all_gatherv")
+            space = dict(db.tile_layout.index_space())
+            space[cat_dim] = root_space[cat_dim]
+            target = _dense_layout(root_layout.dtype, list(space.items()))
+        db = all_gatherv_dist(db, target, rank_dim=rd)
     first = db.data[(0,) * len(dist.rank_dims)]
     out = jax.device_put(first, NamedSharding(dist.dt.mesh, P()))
     return Bag(out, root_layout)
@@ -1253,16 +1350,16 @@ def _issue_reduce_scatterv(
     whose valid leading extents differ (a partial panel accumulated block by
     block, e.g. the ragged SUMMA epilogue).  The blocks are compacted and
     re-padded into R output blocks of ``out_extents`` — all static slices,
-    identical on every rank — then reduced+scattered with ``psum_scatter``.
-    Only ``add``/``mean`` are supported: zero padding is their identity.
+    identical on every rank — then reduced+scattered: ``add``/``mean`` go
+    through ``psum_scatter`` (zero padding is their identity); ``max``/
+    ``min`` re-pad with :func:`reduce_identity`, exchange the stacked
+    blocks with an all-to-all, reduce locally, and re-zero the output
+    padding so the bag's zero-padding contract survives the op.
     """
     rank_dim = rank_dim or dist.rank_dims[0]
     if rank_dim not in dist.rank_dims:
         raise LayoutError(f"bag is not distributed over {rank_dim!r} (has {dist.rank_dims})")
-    if op not in ("add", "mean"):
-        raise LayoutError(
-            f"reduce_scatterv supports add/mean only (zero padding is their identity), got {op!r}"
-        )
+    _resolve_reduce(op)
     if scatter_dim in dist.ragged_dims():
         raise LayoutError(
             f"reduce_scatterv: {scatter_dim!r} is leading-ragged in the input; "
@@ -1306,6 +1403,22 @@ def _issue_reduce_scatterv(
     mid_in = _dense_layout(dist.tile_layout.dtype, rest + [(scatter_dim, B * cap_in)])
     mid_out = _dense_layout(out_tile_layout.dtype, rest + [(scatter_dim, cap_out)])
     axes = _reduce_axes(dist.dt, rank_dim)
+    pos = dist.rank_dims.index(rank_dim)
+    ident = reduce_identity(op, dist.tile_layout.dtype)
+    # for max/min the output padding must be re-zeroed (the reduce of
+    # identities is the identity, not 0): rank-dependent valid extents along
+    # scatter_dim and along the other ragged dims, read from static tables
+    # indexed by the traced communicator coordinates
+    other_masks: list[tuple[int, int, jnp.ndarray]] = []  # (axis, owner pos, table)
+    if op not in ("add", "mean") and dist.extents is not None:
+        cands = _ragged_owner_candidates(dist)
+        for i, (d, _) in enumerate(rest):
+            if d not in cands:
+                continue
+            # extents are uniform along rank_dim (checked above), so the
+            # owner is a position other than rank_dim's unless constant
+            p = next((c for c in cands[d] if c != pos), cands[d][0])
+            other_masks.append((i, p, jnp.asarray(_dim_extent_list(dist, d, p))))
 
     def tile_fn(t):
         x = relayout(t, dist.tile_layout, mid_in)
@@ -1322,11 +1435,22 @@ def _issue_reduce_scatterv(
             blk = jax.lax.slice_in_dim(dense, off, off + e, axis=-1)
             off += e
             pad = [(0, 0)] * (blk.ndim - 1) + [(0, cap_out - e)]
-            pieces.append(jnp.pad(blk, pad))
+            pieces.append(jnp.pad(blk, pad, constant_values=ident))
         stacked = jnp.stack(pieces)  # (R, *mid_out shape), block r = rank r's part
-        y = jax.lax.psum_scatter(stacked, axes, scatter_dimension=0, tiled=False)
-        if op == "mean":
-            y = y / R
+        if op in ("add", "mean"):
+            y = jax.lax.psum_scatter(stacked, axes, scatter_dimension=0, tiled=False)
+            if op == "mean":
+                y = y / R
+        else:
+            y = jax.lax.all_to_all(stacked, axes, split_axis=0, concat_axis=0, tiled=False)
+            y = (jnp.max if op == "max" else jnp.min)(y, axis=0)
+            # restore the zero-padding contract of the result bag
+            my_ext = jnp.asarray(out_extents)[_flat_rank(dist.dt, rank_dim)]
+            valid = jax.lax.broadcasted_iota(jnp.int32, y.shape, y.ndim - 1) < my_ext
+            for axis, p, table in other_masks:
+                e = table[_flat_rank(dist.dt, dist.rank_dims[p])]
+                valid &= jax.lax.broadcasted_iota(jnp.int32, y.shape, axis) < e
+            y = jnp.where(valid, y, jnp.zeros((), y.dtype))
         return relayout(y, mid_out, out_tile_layout)
 
     out = _shard_collective(dist, out_tile_layout, tile_fn)
@@ -1405,14 +1529,18 @@ def _issue_all_to_allv(
     receive-side compaction are static slices identical on every rank, so
     the whole exchange stays one SPMD program — ``MPI_Alltoallv`` with
     compile-time counts.
+
+    On a communicator grid the exchange runs along the named ``rank_dim``
+    sub-communicators; dims tiled by the other grid dims ride through at
+    capacity and keep their extents, and the per-sub-communicator counts of
+    ``concat_dim`` come from the grid extents table.
     """
     if split_dim == concat_dim:
         raise LayoutError("all_to_allv: split_dim and concat_dim must differ")
     rank_dim = rank_dim or dist.rank_dims[0]
     if rank_dim not in dist.rank_dims:
         raise LayoutError(f"bag is not distributed over {rank_dim!r} (has {dist.rank_dims})")
-    if len(dist.rank_dims) != 1:
-        raise LayoutError("all_to_allv currently needs a 1-D communicator")
+    pos = dist.rank_dims.index(rank_dim)
     R = dist.dt.comm_size(rank_dim)
     split_extents = tuple(int(e) for e in split_extents)
     if len(split_extents) != R:
@@ -1421,13 +1549,25 @@ def _issue_all_to_allv(
         raise LayoutError(
             "all_to_allv: input must be ragged along concat_dim (use all_to_all for dense)"
         )
-    owners = _ragged_owners(dist)
-    if set(owners) != {concat_dim}:
+    cands = _ragged_owner_candidates(dist)
+    if concat_dim not in cands or pos not in cands[concat_dim]:
         raise LayoutError(
-            f"all_to_allv: input must be ragged along exactly {concat_dim!r} "
-            f"(ragged dims: {sorted(owners)})"
+            f"all_to_allv: input must be ragged along {concat_dim!r} over "
+            f"{rank_dim!r} (ragged dims: {sorted(cands)})"
         )
-    concat_exts = _dim_extent_list(dist, concat_dim, owners[concat_dim])
+    if split_dim in cands:
+        raise LayoutError(
+            f"all_to_allv: split dim {split_dim!r} must be dense in the input "
+            f"(ragged dims: {sorted(cands)})"
+        )
+    other_ragged = tuple(d for d in dist.ragged_dims() if d != concat_dim)
+    for d in other_ragged:
+        if cands[d] == [pos]:
+            raise LayoutError(
+                f"all_to_allv: ragged dim {d!r} varies along {rank_dim!r}; only "
+                f"{concat_dim!r} may (other ragged dims belong to other grid dims)"
+            )
+    concat_exts = _dim_extent_list(dist, concat_dim, pos)
     in_space = dist.tile_layout.index_space()
     out_space = out_tile_layout.index_space()
     X_total = sum(split_extents)
@@ -1452,7 +1592,10 @@ def _issue_all_to_allv(
     expected[concat_dim] = C_total
     check_same_space(out_space, expected, what="all_to_allv")
     check_ragged_dims(
-        dist.tile_layout, out_tile_layout, (split_dim, concat_dim), what="all_to_allv"
+        dist.tile_layout,
+        out_tile_layout,
+        (split_dim, concat_dim) + other_ragged,
+        what="all_to_allv",
     )
     cap_c = in_space[concat_dim]
     rest = [(d, s) for d, s in in_space.items() if d not in (split_dim, concat_dim)]
@@ -1484,8 +1627,14 @@ def _issue_all_to_allv(
         return relayout(full, mid_out, out_tile_layout)
 
     out = _shard_collective(dist, out_tile_layout, tile_fn)
-    new_ext = tuple(((split_dim, split_extents[r]),) for r in range(R))
-    return dataclasses.replace(out, extents=new_ext)
+    new_ext = []
+    for coords in itertools.product(*(range(s) for s in dist.grid_shape)):
+        entry = [
+            p for p in dist.extents[dist.flat_rank(coords)] if p[0] != concat_dim
+        ]
+        entry.append((split_dim, split_extents[coords[pos]]))
+        new_ext.append(tuple(entry))
+    return dataclasses.replace(out, extents=tuple(new_ext))
 
 
 def all_to_allv_start(

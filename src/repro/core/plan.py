@@ -1,0 +1,218 @@
+"""Comm plans: declarative communication schedules over :class:`Pending`.
+
+Three algorithms in this repo (SUMMA, ragged SUMMA, sp_ring attention) used
+to hand-write the same double-buffered rotation — issue the transfer for
+step ``k+1`` before step ``k``'s compute, wait for it after.  A
+:class:`CommPlan` declares that schedule *once*: the algorithm provides the
+stage callbacks (``transfer``/``compute``/``epilogue``) and the planner
+emits the double-buffered program.  The blocking interpretation
+(``double_buffer=False``) runs ``transfer(...).wait()`` at the completion
+point — the same issue path as the overlapped form, so the two are
+bit-identical by construction (the repo-wide ``*_start(...).wait()``
+invariant of :mod:`repro.core.request` lifted to whole schedules).
+
+Each plan also carries its *declared overlap intent*
+(:attr:`CommPlan.intent`): ring and halo schedules give the XLA scheduler
+an issue/complete window with independent compute inside it, so they
+declare ``"overlapped"``; a pipeline chains compute -> transfer -> compute
+through data dependence, so it declares ``"serialized"``.  The intent is a
+verifiable contract: :func:`repro.launch.hlo_walk.plan_agreement` checks
+the declared intent against what the HLO walker *proves* about the
+compiled program, and the tier-1 dry-run gates fail on disagreement.
+
+MPI correspondence
+------------------
+A comm plan is the layout-agnostic analogue of MPI *persistent requests*:
+the schedule is declared once (``MPI_Send_init``/``MPI_Recv_init`` fix the
+envelope), each step starts the pre-declared transfer
+(``MPI_Start``) and completes it after the overlapped compute
+(``MPI_Wait``).
+
+=============================  =============================================
+MPI persistent pattern         comm plan
+=============================  =============================================
+``MPI_Send_init/Recv_init``    :func:`ring`/:func:`halo`/:func:`pipeline`
+                               (declare the schedule, no data moves)
+``MPI_Start`` (step k)         planner issues ``transfer(state, k)``
+                               before step k's ``compute``
+``MPI_Wait`` (step k)          planner waits the :class:`Pending` after
+                               ``compute``, yielding step k+1's state
+``MPI_Startall`` degenerate    ``double_buffer=False`` — start+wait
+                               back-to-back (blocking), bit-identical
+=============================  =============================================
+
+Migration note: ``summa_ring_program`` before/after
+---------------------------------------------------
+Before (hand-written rotation, repeated in every algorithm)::
+
+    for s in range(R):
+        pend = None
+        if double_buffer and s < R - 1:
+            pend = ring_shift_start(B_cur, -1, rank_dim="Rj")
+        P = rank_map(step, dtA, P, A_dist, B_cur, out_tile_layout=P_l)
+        if s < R - 1:
+            B_cur = pend.wait() if double_buffer else ring_shift(B_cur, -1)
+    return reduce_scatter_bag(P, C_tile, scatter_dim="j", rank_dim="Ck").data
+
+After (schedule declared once; the planner owns issue/wait placement)::
+
+    plan = ring(
+        R,
+        transfer=lambda b, s: ring_shift_start(b, -1, rank_dim="Rj"),
+        compute=lambda p, b, s: rank_map(step(s), dtA, p, A_dist, b,
+                                         out_tile_layout=P_l),
+        epilogue=lambda p, b: reduce_scatter_bag(
+            p, C_tile, scatter_dim="j", rank_dim="Ck").data,
+    )
+    return plan.run(B_cur, P, double_buffer=double_buffer)
+
+Stage signatures
+----------------
+``transfer(state, step) -> Pending``
+    Issue the non-blocking transfer of ``state`` for the next step and
+    return the :class:`Pending` (ring/halo).  In a pipeline the planner
+    passes the *carry* — the freshly computed value is what flows.
+``compute(carry, state, step) -> carry``
+    The overlapped per-step compute.  Must not depend on the in-flight
+    transfer's result (the planner hands it the pre-transfer ``state``).
+``epilogue(carry, state) -> result``
+    Optional final stage (e.g. the SUMMA reduce-scatter); receives the
+    final carry and the final state.  Defaults to returning ``carry``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from .request import Pending
+
+__all__ = ["CommPlan", "ring", "halo", "pipeline", "intent_of"]
+
+_INTENTS = {"ring": "overlapped", "halo": "overlapped", "pipeline": "serialized"}
+
+
+def intent_of(kind: str) -> str:
+    """Declared overlap intent of a plan kind: what the HLO walker must
+    prove about the emitted program (``"overlapped"`` / ``"serialized"``)."""
+    if kind not in _INTENTS:
+        raise ValueError(f"unknown plan kind {kind!r} (have {sorted(_INTENTS)})")
+    return _INTENTS[kind]
+
+
+@dataclasses.dataclass(frozen=True)
+class CommPlan:
+    """A declared communication schedule (see module docstring).
+
+    Build with :func:`ring`, :func:`halo`, or :func:`pipeline`; execute
+    with :meth:`run`.  The planner — not the algorithm — places the
+    issue/wait points, so every consumer gets the double-buffered form and
+    its bit-identical blocking interpretation for free.
+    """
+
+    kind: str
+    steps: int
+    transfer: Callable[[Any, int], Pending]
+    compute: Callable[[Any, Any, int], Any]
+    epilogue: Callable[[Any, Any], Any] | None = None
+
+    def __post_init__(self):
+        intent_of(self.kind)  # validates the kind
+        if self.steps < 1:
+            raise ValueError(f"plan needs at least one step, got {self.steps}")
+
+    @property
+    def intent(self) -> str:
+        """Declared overlap intent, checked against the compiled HLO by
+        :func:`repro.launch.hlo_walk.plan_agreement`."""
+        return intent_of(self.kind)
+
+    def _issue(self, value, step: int) -> Pending:
+        pend = self.transfer(value, step)
+        if not isinstance(pend, Pending):
+            raise TypeError(
+                f"plan transfer must return a Pending (got {type(pend).__name__}); "
+                "use the *_start form of the collective"
+            )
+        return pend
+
+    def _finish(self, carry, state):
+        if self.epilogue is None:
+            return carry
+        return self.epilogue(carry, state)
+
+    def run(self, state, carry, *, double_buffer: bool = True):
+        """Emit the program: rotate ``state`` through ``steps`` transfers
+        while folding ``compute`` over ``carry``.
+
+        ``double_buffer=True`` issues step ``k+1``'s transfer before step
+        ``k``'s compute and waits after it (the overlap window);
+        ``double_buffer=False`` starts and waits back-to-back at the
+        completion point — same issue path, bit-identical results.
+        """
+        if self.kind == "pipeline":
+            # compute -> transfer -> compute chained through data
+            # dependence: the transfer ships the value that was just
+            # computed, so no overlap window exists by construction (the
+            # serialized negative control for the HLO walker).
+            for s in range(self.steps):
+                carry = self.compute(carry, state, s)
+                if s < self.steps - 1:
+                    state = self._issue(carry, s).wait()
+            return self._finish(carry, state)
+        if self.kind == "halo":
+            # one exchange overlapped with the interior compute; the
+            # epilogue combines interior result and received halos.
+            if double_buffer:
+                pend = self._issue(state, 0)
+                carry = self.compute(carry, state, 0)
+                state = pend.wait()
+            else:
+                state = self._issue(state, 0).wait()
+                carry = self.compute(carry, state, 0)
+            return self._finish(carry, state)
+        # ring: issue-before / wait-after rotation.
+        for s in range(self.steps):
+            pend = None
+            if double_buffer and s < self.steps - 1:
+                pend = self._issue(state, s)
+            carry = self.compute(carry, state, s)
+            if s < self.steps - 1:
+                state = pend.wait() if double_buffer else self._issue(state, s).wait()
+        return self._finish(carry, state)
+
+
+def ring(
+    steps: int,
+    *,
+    transfer: Callable[[Any, int], Pending],
+    compute: Callable[[Any, Any, int], Any],
+    epilogue: Callable[[Any, Any], Any] | None = None,
+) -> CommPlan:
+    """Declare an R-step ring rotation (SUMMA panels, ring attention KV):
+    each step computes on the current state while the next state is in
+    flight.  Declared intent: ``"overlapped"``."""
+    return CommPlan("ring", steps, transfer, compute, epilogue)
+
+
+def halo(
+    *,
+    transfer: Callable[[Any, int], Pending],
+    compute: Callable[[Any, Any, int], Any],
+    epilogue: Callable[[Any, Any], Any] | None = None,
+) -> CommPlan:
+    """Declare a halo exchange overlapped with the interior compute; the
+    epilogue combines both.  Declared intent: ``"overlapped"``."""
+    return CommPlan("halo", 1, transfer, compute, epilogue)
+
+
+def pipeline(
+    steps: int,
+    *,
+    transfer: Callable[[Any, int], Pending],
+    compute: Callable[[Any, Any, int], Any],
+    epilogue: Callable[[Any, Any], Any] | None = None,
+) -> CommPlan:
+    """Declare a stage pipeline whose transfers ship each stage's output to
+    the next compute — serialized by data dependence.  Declared intent:
+    ``"serialized"`` (the negative control for plan/HLO agreement)."""
+    return CommPlan("pipeline", steps, transfer, compute, epilogue)

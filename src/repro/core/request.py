@@ -33,6 +33,12 @@ MPI                        repro.core
 ``MPI_Iallgatherv``        ``collectives.all_gatherv_start`` (ragged tiles)
 ``MPI_Ialltoallv``         ``collectives.all_to_allv_start``
 ``Ireduce_scatter`` (v)    ``collectives.reduce_scatterv_start``
+``MPI_Send_init`` /        ``plan.ring`` / ``plan.halo`` / ``plan.pipeline``
+``MPI_Recv_init``          (declare a whole schedule once, no data moves)
+``MPI_Start``/``MPI_Wait`` ``plan.CommPlan.run`` — the planner places the
+                           issue (before each step's compute) and the wait
+                           (after it); ``double_buffer=False`` degenerates
+                           to start+wait back-to-back, bit-identically
 =========================  ====================================================
 
 The v-collective requests carry ragged :class:`~repro.core.collectives.

@@ -24,6 +24,12 @@ Usage:
          --set moe_capacity_factor=1.0 --microbatches 4
   python -m repro.launch.dryrun --summa-gemm   # SUMMA ring: 0 serialized gate
   python -m repro.launch.dryrun --sp-ring      # ring attention: same gate
+
+The three program gates (--summa-gemm / --uneven / --sp-ring) also assert
+*plan/HLO agreement*: each program's declared comm-plan intent
+(repro.core.plan) must match what the HLO walker proves about the compiled
+artifact.  ``--plan-report out.json`` runs all three and writes the per-plan
+agreement table (the nightly CI artifact).
 """
 
 import argparse
@@ -219,6 +225,8 @@ def summa_dryrun(*, ni: int = 256, nj: int = 256, nk: int = 256,
             "collectives_overlapped_any_kind": st.collectives_overlapped(),
             "exposed_bytes": st.exposed_collective_bytes(),
             "overlap_by_kind": st.overlap_by_kind(),
+            # plan-declared intent vs HLO-proven verdict (gate: must agree)
+            "plan": hlo_walk.plan_agreement(st, meta["plan_intent"]),
         }
     if verbose:
         print(json.dumps(out, indent=1))
@@ -262,6 +270,7 @@ def ragged_summa_dryrun(*, ni: int = 35, nj: int = 35, nk: int = 35,
             "wire_matches_padded_model": wire == model["ring_padded_bytes"],
             "valid_matches_ragged_model": abs(valid - model["ring_bytes"]) < 1e-6,
             "overlap_by_kind": st.overlap_by_kind(),
+            "plan": hlo_walk.plan_agreement(st, meta["plan_intent"]),
         }
     if verbose:
         print(json.dumps(out, indent=1))
@@ -280,12 +289,23 @@ def sp_ring_dryrun(*, batch: int = 2, seq: int = 256, d_model: int = 64,
     off the compute def-use chain even though their payloads were *produced*
     by the projection GEMMs, because each step's local attention is an
     independent sibling branch the scheduler can hide the transfer behind.
+
+    A ``seq`` that does not divide the model axis runs the *ragged* ring
+    (padded capacity KV chunks + masked scores): the walker's permute bytes
+    then include the padding, so the report scales them by the statically
+    known valid fraction ``seq / (R * cap)`` — the sp_ring twin of the
+    ragged SUMMA's valid-bytes accounting.  The ragged trace also carries
+    one *boundary* collective outside the ring plan: XLA all-gathers the
+    padded seq-sharded output to slice it back to ``seq`` rows.  That
+    reshard is the caller's (and genuinely on the critical path), so the
+    plan agreement is scoped to the plan's own collective kind
+    (``collective-permute``) and the boundary count is reported separately.
     """
     from types import SimpleNamespace
 
     from repro.launch import hlo_walk
     from repro.models import attention as attn
-    from repro.models.sharding import make_recipe, use_recipe
+    from repro.models.sharding import make_recipe, ragged_seq_extents, use_recipe
     from repro.core.compat import make_mesh
 
     cfg = SimpleNamespace(n_heads=n_heads, n_kv=n_kv, head_dim=head_dim,
@@ -300,8 +320,19 @@ def sp_ring_dryrun(*, batch: int = 2, seq: int = 256, d_model: int = 64,
     }
     x = jax.ShapeDtypeStruct((batch, seq, d_model), np.float32)
 
+    # ragged seq shards: the KV ring moves padded capacity chunks; the valid
+    # payload fraction is known statically from the extents table
+    R = grid[1]
+    valid_fractions = None
+    if seq % R:
+        cap, _ = ragged_seq_extents(seq, R)
+        valid_fractions = {"collective-permute": seq / (R * cap)}
+
     out: dict = {"batch": batch, "seq": seq, "d_model": d_model,
-                 "n_heads": n_heads, "n_kv": n_kv, "grid": list(grid)}
+                 "n_heads": n_heads, "n_kv": n_kv, "grid": list(grid),
+                 "ragged_seq": bool(seq % R),
+                 "valid_fraction": None if valid_fractions is None
+                 else valid_fractions["collective-permute"]}
     for variant, db in (("double_buffered", True), ("blocking", False)):
         recipe = make_recipe(cfg, mesh, attn_mode="sp_ring")
 
@@ -313,15 +344,23 @@ def sp_ring_dryrun(*, batch: int = 2, seq: int = 256, d_model: int = 64,
 
         with mesh:
             compiled = jax.jit(fwd).lower(params, x).compile()
-        st = hlo_walk.analyze(compiled.as_text())
+        st = hlo_walk.analyze(compiled.as_text(), valid_fractions=valid_fractions)
         # R-1 ring steps x (K, V) rotations
         out[variant] = {
             "collectives": len(st.collectives),
             "overlapped": st.collectives_overlapped(),
             "serialized": st.collectives_serialized(),
             "exposed_bytes": st.exposed_collective_bytes(),
+            "hlo_wire_permute_bytes": st.coll_by_op.get("collective-permute", 0.0),
+            "hlo_valid_permute_bytes": st.coll_by_op_valid.get("collective-permute", 0.0),
             "overlap_by_kind": st.overlap_by_kind(),
             "expected_ring_transfers": 2 * (grid[1] - 1),
+            # the attention plan's transfers are the KV ring permutes; the
+            # ragged output-slice all-gather is a caller-side reshard
+            "plan": hlo_walk.plan_agreement(st, attn.RING_ATTENTION_PLAN_INTENT,
+                                            kind="collective-permute"),
+            "boundary_serialized": (st.collectives_serialized()
+                                    - st.collectives_serialized("collective-permute")),
         }
     if verbose:
         print(json.dumps(out, indent=1))
@@ -353,6 +392,52 @@ def _model_flops(cfg, shape) -> float:
         return 2.0 * n * tokens
     tokens = shape.global_batch  # one new token per sequence
     return 2.0 * n * tokens
+
+
+def plan_report(path: str, verbose: bool = True) -> int:
+    """Run every comm-plan dry run (SUMMA ring, ragged SUMMA ring, sp ring
+    attention dense AND ragged seq) and write the per-plan overlap/agreement
+    table to ``path`` — the nightly CI artifact.  Returns a process exit
+    code: non-zero iff any plan's declared intent disagrees with the proven
+    HLO verdict."""
+    programs = {
+        "summa_ring": summa_dryrun(verbose=False),
+        "ragged_summa_ring": ragged_summa_dryrun(verbose=False),
+        "sp_ring_attention": sp_ring_dryrun(verbose=False),
+        "sp_ring_attention_ragged": sp_ring_dryrun(seq=250, verbose=False),
+    }
+    rows = []
+    for prog, rep in programs.items():
+        for variant in ("double_buffered", "blocking"):
+            cell = rep[variant]
+            rows.append({
+                "program": prog,
+                "variant": variant,
+                **cell["plan"],
+                "exposed_bytes": cell["exposed_bytes"],
+                "overlap_by_kind": cell["overlap_by_kind"],
+            })
+    disagreements = [r for r in rows if not r["agree"]]
+    report = {
+        "plans": rows,
+        "n_plans": len(rows),
+        "n_disagreements": len(disagreements),
+        "agree_all": not disagreements,
+    }
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1)
+    if verbose:
+        for r in rows:
+            mark = "ok " if r["agree"] else "FAIL"
+            print(f"[{mark}] {r['program']}/{r['variant']}: declared="
+                  f"{r['declared']} proven={r['proven']} "
+                  f"(serialized={r['serialized']} overlapped={r['overlapped']})")
+        print(f"plan report -> {path} ({len(rows)} plans, "
+              f"{len(disagreements)} disagreements)")
+    return 1 if disagreements else 0
 
 
 def iter_cells():
@@ -394,7 +479,14 @@ def main() -> None:
     # 35 is odd AND 3 mod 4: every dim is genuinely ragged on the default grid
     ap.add_argument("--uneven-dims", default="35,35,35", help="ni,nj,nk for --uneven")
     ap.add_argument("--uneven-grid", default="2x4", help="rows x cols for --uneven")
+    ap.add_argument("--plan-report", default=None, metavar="PATH",
+                    help="run all three comm-plan dry runs (SUMMA, ragged "
+                         "SUMMA, sp ring — dense and ragged seq) and write "
+                         "the per-plan overlap/agreement table as JSON")
     args = ap.parse_args()
+
+    if args.plan_report:
+        raise SystemExit(plan_report(args.plan_report))
 
     if args.summa_gemm:
         ni, nj, nk = (int(x) for x in args.summa_dims.split(","))
@@ -402,6 +494,8 @@ def main() -> None:
         rep = summa_dryrun(ni=ni, nj=nj, nk=nk, grid=grid)
         bad = sum(rep[v]["collectives_serialized_any_kind"]
                   for v in ("double_buffered", "blocking"))
+        bad += sum(0 if rep[v]["plan"]["agree"] else 1
+                   for v in ("double_buffered", "blocking"))
         raise SystemExit(1 if bad else 0)
 
     if args.uneven:
@@ -413,12 +507,19 @@ def main() -> None:
             bad += rep[v]["serialized"]
             bad += 0 if rep[v]["wire_matches_padded_model"] else 1
             bad += 0 if rep[v]["valid_matches_ragged_model"] else 1
+            bad += 0 if rep[v]["plan"]["agree"] else 1
         raise SystemExit(1 if bad else 0)
 
     if args.sp_ring:
         grid = tuple(int(x) for x in args.sp_ring_grid.split("x"))
         rep = sp_ring_dryrun(seq=args.sp_ring_seq, grid=grid)
-        bad = sum(rep[v]["serialized"] for v in ("double_buffered", "blocking"))
+        bad = 0
+        for v in ("double_buffered", "blocking"):
+            bad += rep[v]["plan"]["serialized"]  # ring permutes on the chain
+            bad += 0 if rep[v]["plan"]["agree"] else 1
+            if not rep["ragged_seq"]:
+                # dense traces have no boundary reshard: nothing may serialize
+                bad += rep[v]["serialized"]
         raise SystemExit(1 if bad else 0)
 
     os.makedirs(args.out, exist_ok=True)

@@ -75,6 +75,7 @@ __all__ = [
     "analyze",
     "classify_collectives",
     "classify_permutes",
+    "plan_agreement",
     "top_contributors",
 ]
 
@@ -642,6 +643,37 @@ def analyze(hlo_text: str, *, valid_fractions: Mapping[str, float] | None = None
 
     walk(entry, 1.0)
     return stats
+
+
+def plan_agreement(stats: HloStats, declared: str, *, kind: str | None = None) -> dict:
+    """Check a comm plan's *declared* overlap intent against what the walker
+    *proves* about the compiled HLO.
+
+    ``declared`` is :attr:`repro.core.plan.CommPlan.intent` (``"overlapped"``
+    or ``"serialized"``); the proven verdict is ``"serialized"`` iff any
+    collective of ``kind`` (all kinds when None) sits on the compute def-use
+    chain, else ``"overlapped"``.  Returns the row the dry-run gates and the
+    nightly plan-overlap report consume:
+
+    ``{"declared", "proven", "agree", "serialized", "overlapped"}``
+
+    The tier-1 gates fail when ``agree`` is False — a plan that claims
+    overlap must compile to a program the walker can prove overlapped, and
+    the serialized negative control (:func:`repro.core.plan.pipeline`) must
+    stay provably serialized.
+    """
+    if declared not in ("overlapped", "serialized"):
+        raise ValueError(f"unknown declared intent {declared!r}")
+    serialized = stats.collectives_serialized(kind)
+    overlapped = stats.collectives_overlapped(kind)
+    proven = "serialized" if serialized else "overlapped"
+    return {
+        "declared": declared,
+        "proven": proven,
+        "agree": declared == proven,
+        "serialized": serialized,
+        "overlapped": overlapped,
+    }
 
 
 def classify_collectives(

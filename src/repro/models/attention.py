@@ -25,7 +25,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.compat import shard_map
-from repro.core.p2p import shard_ring_shift, shard_ring_shift_start
+from repro.core.p2p import shard_ring_shift_start
+from repro.core.plan import intent_of, ring
 from repro.kernels import ops
 from .module import pspec
 from .sharding import _fit_spec, current_recipe, shard_act
@@ -88,6 +89,11 @@ def attention_seq(q, k, v, *, causal: bool = True, impl: str | None = None, bloc
 
 # ------------------------------------------------------- ring attention ----
 
+# declared overlap intent of the attention ring's comm plan, consumed by the
+# sp_ring dry run's plan/HLO agreement gate
+RING_ATTENTION_PLAN_INTENT = intent_of("ring")
+
+
 def _ring_attention_local(q, k, v, *, axis_name: str, causal: bool, double_buffer: bool,
                           valid_len: int | None = None):
     """Per-device body of the sequence-parallel attention ring.
@@ -98,12 +104,14 @@ def _ring_attention_local(q, k, v, *, axis_name: str, causal: bool, double_buffe
     online-softmax attention of the resident Q chunk against the currently
     held KV block, exactly the flash-attention merge but with the block axis
     unrolled over *devices* instead of VMEM tiles; meanwhile the next KV
-    block is already in flight — ``shard_ring_shift_start`` (the
-    ``MPI_Isend``/``Irecv`` analogue) is issued *before* the step's local
-    attention and completed with ``Pending.wait`` after it, exactly like the
-    double-buffered SUMMA ring issues its panel rotation before the local
-    GEMM.  ``double_buffer=False`` keeps the blocking formulation (compute,
-    then rotate) — numerically bit-identical, the reference variant.
+    block is already in flight.  The rotation is a declared
+    :func:`repro.core.plan.ring` comm plan: the planner issues
+    ``shard_ring_shift_start`` (the ``MPI_Isend``/``Irecv`` analogue)
+    *before* the step's local attention and completes it with
+    ``Pending.wait`` after, exactly like the double-buffered SUMMA ring
+    issues its panel rotation before the local GEMM.
+    ``double_buffer=False`` keeps the blocking interpretation of the same
+    plan — numerically bit-identical, the reference variant.
 
     ``valid_len`` enables *ragged* sequence shards (S % R != 0): the global
     sequence is padded to R * Sl and positions >= valid_len are masked out
@@ -126,13 +134,8 @@ def _ring_attention_local(q, k, v, *, axis_name: str, causal: bool, double_buffe
     m = jnp.full((B, G, rep, Sl), -1e30, jnp.float32)
     l = jnp.zeros((B, G, rep, Sl), jnp.float32)
 
-    kv = (k, v)
-    for s in range(R):
-        pend = None
-        if double_buffer and s < R - 1:
-            # issue step s's rotation before the local attention: the
-            # transfer has no data dependence on this step's math
-            pend = shard_ring_shift_start(kv, axis_name, 1)
+    def compute(acc, kv, s):
+        o, m, l = acc
         kb, vb = kv
         # after s hops of +1, rank r holds the KV block of rank (r - s) % R
         k_pos = ((me - s) % R) * Sl + jnp.arange(Sl)
@@ -153,10 +156,19 @@ def _ring_attention_local(q, k, v, *, axis_name: str, causal: bool, double_buffe
         o = o * corr[..., None] + jnp.einsum(
             "bgrqk,bgkd->bgrqd", p, vb.astype(jnp.float32),
             preferred_element_type=jnp.float32)
-        m = m_new
-        if s < R - 1:
-            kv = pend.wait() if double_buffer else shard_ring_shift(kv, axis_name, 1)
-    return (o / l[..., None]).reshape(B, Hq, Sl, D).astype(q.dtype)
+        return (o, m_new, l)
+
+    # same declared schedule as the SUMMA rings: the planner issues each
+    # step's KV rotation before the local attention and waits after it
+    plan = ring(
+        R,
+        transfer=lambda kv, s: shard_ring_shift_start(kv, axis_name, 1),
+        compute=compute,
+        epilogue=lambda acc, kv: (
+            acc[0] / acc[2][..., None]
+        ).reshape(B, Hq, Sl, D).astype(q.dtype),
+    )
+    return plan.run((k, v), (o, m, l), double_buffer=double_buffer)
 
 
 def ring_attention_seq(q, k, v, *, mesh, axis_name: str = "model", q_spec=None,

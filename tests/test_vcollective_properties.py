@@ -158,6 +158,92 @@ print('OK')
     assert "OK" in out
 
 
+def test_reduce_scatter_max_min_identity_property(distributed):
+    """Max/min reductions over ragged blocks match the single-device oracle
+    for random extents, comm sizes, and sign-mixed data: the created blocks
+    are padded with the op identity (-inf/+inf), never zero, and the output
+    padding is re-zeroed — plus the dense max/min reduce-scatter direct
+    route and the reduce_identity table itself."""
+    out = distributed(
+        _PRELUDE
+        + """
+@settings(max_examples=5, deadline=None)
+@given(
+    st.sampled_from([2, 4, 8]),
+    st.integers(5, 12),                               # nj total
+    st.sampled_from([1, 3]),                          # dense i extent
+    st.sampled_from(['max', 'min']),
+    st.integers(0, 10**9),                            # extents/data entropy
+)
+def prop(R, nj, ni, op, seed):
+    nj = max(nj, R)
+    cap_b, eb = ragged_split(nj, R)
+    eo = rand_extents(seed, nj, R)
+    cap_o = max(eo)
+    dt = comm(R)
+    panel_l = scalar(np.float32) ^ vector('j', R * cap_b) ^ vector('i', ni)
+    out_l = scalar(np.float32) ^ vector('j', cap_o) ^ vector('i', ni)
+    rng = np.random.default_rng(seed % 2**31)
+    dense = rng.standard_normal((R, ni, nj)).astype(np.float32)  # mixed signs
+    buf = np.zeros((R, ni, R * cap_b), np.float32)
+    for r in range(R):
+        off = 0
+        for b in range(R):
+            buf[r, :, b * cap_b : b * cap_b + eb[b]] = dense[r, :, off:off + eb[b]]
+            off += eb[b]
+    db = DistBag(jax.device_put(jnp.asarray(buf), dist_sharding(dt, panel_l)),
+                 panel_l, dt, ('R',))
+    red = np.max if op == 'max' else np.min
+    total = red(dense, axis=0)
+    res = reduce_scatterv_bag(db, out_l, scatter_dim='j', in_blocks=(cap_b, eb),
+                              out_extents=eo, op=op)
+    off = 0
+    for r in range(R):
+        t = res.tile(r).to_layout(scalar(np.float32) ^ vector('j', eo[r]) ^ vector('i', ni))
+        assert eq(t.data, total[:, off:off + eo[r]]), (op, R, r, eo)
+        # output padding re-zeroed: the identity never leaks into the slots
+        raw = np.asarray(res.data[r])
+        assert np.all(raw[:, eo[r]:] == 0.0), (op, R, r)
+        off += eo[r]
+    # blocking == start().wait() by construction
+    assert eq(res.data, reduce_scatterv_start(db, out_l, scatter_dim='j',
+              in_blocks=(cap_b, eb), out_extents=eo, op=op).wait().data)
+
+# the identity table itself
+assert reduce_identity('add', np.dtype(np.float32)) == 0.0
+assert reduce_identity('mean', np.dtype(np.int32)) == 0
+assert reduce_identity('max', np.dtype(np.float32)) == -np.inf
+assert reduce_identity('min', np.dtype(np.float32)) == np.inf
+assert reduce_identity('max', np.dtype(np.int32)) == np.iinfo(np.int32).min
+assert reduce_identity('min', np.dtype(np.int32)) == np.iinfo(np.int32).max
+try:
+    reduce_identity('max', np.dtype(np.bool_))
+    raise SystemExit('expected LayoutError')
+except LayoutError:
+    pass
+
+# dense max/min reduce-scatter: the direct psum_scatter-style route (1/R the
+# allreduce wire bytes) against the numpy oracle
+R, ni, cap = 4, 3, 2
+dt = comm(R)
+tl = scalar(np.float32) ^ vector('j', R * cap) ^ vector('i', ni)
+ol = scalar(np.float32) ^ vector('j', cap) ^ vector('i', ni)
+buf = np.random.default_rng(7).standard_normal((R, ni, R * cap)).astype(np.float32)
+dist = DistBag(jax.device_put(jnp.asarray(buf), dist_sharding(dt, tl)), tl, dt, ('R',))
+for op, red in (('max', np.max), ('min', np.min)):
+    res = reduce_scatter_bag(dist, ol, scatter_dim='j', op=op)
+    for r in range(R):
+        oracle = red(buf[:, :, r * cap:(r + 1) * cap], axis=0)
+        assert eq(res.data[r], oracle), (op, r)
+    assert eq(res.data, reduce_scatter_start(dist, ol, scatter_dim='j', op=op).wait().data)
+
+prop()
+print('OK')
+"""
+    )
+    assert "OK" in out
+
+
 def test_wait_all_order_independence_with_v_collectives(distributed):
     """MPI_Waitall semantics over a MIX of dense and ragged requests: an
     all_gatherv, an all_to_allv, a ragged ring_shift, and a dense all_reduce

@@ -27,8 +27,27 @@ def _time(fn, reps=5):
     return (time.perf_counter() - t0) / reps
 
 
+def _serve_tok_s(cfg, params) -> float:
+    """End-to-end engine throughput (tokens/sec): continuous batching with
+    admission + prefill + greedy decode, timed on warm jits (the first
+    request wave pays compilation, the second is measured)."""
+    from repro.serve.engine import Engine, ServeConfig
+
+    scfg = ServeConfig(max_len=64, batch_slots=2, temperature=0.0, eos_token=-1)
+    eng = Engine(cfg, params, scfg)
+    max_new = 8
+    for rid in range(2):  # warm wave: compiles prefill + decode
+        eng.submit(rid, [3 + rid, 7, 11], max_new_tokens=max_new)
+    eng.run()
+    for rid in range(2, 6):
+        eng.submit(rid, [3 + rid, 7, 11], max_new_tokens=max_new)
+    t0 = time.perf_counter()
+    eng.run()
+    return 4 * max_new / (time.perf_counter() - t0)
+
+
 def run() -> list[str]:
-    out = ["arch,train_us_per_call,decode_us_per_call"]
+    out = ["arch,train_us_per_call,decode_us_per_call,serve_tok_s"]
     key = jax.random.PRNGKey(0)
     for arch in configs.ARCH_IDS:
         cfg = configs.get(arch, smoke=True)
@@ -50,7 +69,10 @@ def run() -> list[str]:
             dec_batch["image_embeds"] = jnp.zeros((CELL.global_batch, cfg.enc_len, cfg.enc_dim))
         dstep = jax.jit(lambda p, s, b: lm.decode_step(p, s, b, cfg))
         t_dec = _time(lambda: dstep(params, state, dec_batch)[0])
-        out.append(f"{arch},{t_train*1e6:.0f},{t_dec*1e6:.0f}")
+        # the engine does not feed encoder inputs, so the VLM family has no
+        # serving row (cross-attn needs per-request image embeds)
+        tok_s = "" if cfg.family == "vlm" else f"{_serve_tok_s(cfg, params):.1f}"
+        out.append(f"{arch},{t_train*1e6:.0f},{t_dec*1e6:.0f},{tok_s}")
     return out
 
 

@@ -58,10 +58,42 @@ Comm plans
 ----------
 :mod:`repro.core.plan` lifts the request layer one level up: an algorithm
 declares its communication schedule once (:func:`ring` / :func:`halo` /
-:func:`pipeline` — the MPI persistent-request / ``MPI_Start`` pattern) and
-the planner emits the double-buffered program with a bit-identical blocking
-interpretation.  Each plan carries a declared overlap intent that
-``repro.launch.hlo_walk.plan_agreement`` verifies against the compiled HLO.
+:func:`pipeline` / ``stagger`` — the MPI persistent-request / ``MPI_Start``
+pattern) and the planner emits the double-buffered program with a
+bit-identical blocking interpretation.  Each plan carries a declared
+overlap intent that ``repro.launch.hlo_walk.plan_agreement`` verifies
+against the compiled HLO.
+
+Serving on the comm layer
+-------------------------
+The continuous-batching engine (:mod:`repro.serve`) is the same abstraction
+stack driven from the other end: every serving phase is one of the layer's
+collectives over the request-length extents table.
+
+======================  =====================================================
+Engine phase            MPI analogue (repro.core construct)
+======================  =====================================================
+KV cache residency      ragged ``DistBag``: uniform capacity tiles (slots x
+                        max_len) + per-request valid extents
+                        (``repro.serve.kv.KVLedger`` — the ``recvcounts``
+                        table, applied to memory instead of the wire)
+admission-time prefill  ``Allgatherv`` over sequence shards: the prompt
+                        chunk's ring attention (``sp_ring`` plan) rotates
+                        KV shards exactly like the v-collective's ragged
+                        tiles, masked to each request's valid length
+decode (per layer)      ``Iallreduce`` (tensor-parallel partial sums) /
+                        ``Iallgather`` (vocab-sharded logits) issued through
+                        the shared :class:`Pending` request path
+                        (:mod:`repro.serve.tp_decode`)
+decode schedule         ``stagger`` comm plan: persistent-request round-robin
+                        over independent microbatches — microbatch *i*'s
+                        reduction completes behind microbatch *i+1*'s
+                        compute, so no collective sits on the decode
+                        critical path (``dryrun --serve`` gates 0
+                        serialized)
+slot release/admit      extents-table update — the same bookkeeping a
+                        ragged redistribution performs before reusing a tile
+======================  =====================================================
 """
 from .compat import make_mesh, shard_map
 from .dims import LayoutError, ceil_div, common_refinement, ragged_split
@@ -124,7 +156,7 @@ from .collectives import (
     dist_sharding,
     rank_map,
 )
-from .plan import CommPlan, halo, intent_of, pipeline, ring
+from .plan import CommPlan, halo, intent_of, pipeline, ring, stagger
 from .p2p import (
     PendingTile,
     permute,
@@ -132,6 +164,9 @@ from .p2p import (
     ring_shift,
     ring_shift_start,
     send_recv,
+    shard_all_gather_start,
+    shard_all_reduce_start,
+    shard_reduce_scatter_start,
     shard_ring_shift,
     shard_ring_shift_start,
     wait,
@@ -210,6 +245,7 @@ __all__ = [
     "ring",
     "halo",
     "pipeline",
+    "stagger",
     "intent_of",
     "send_recv",
     "permute",
@@ -217,6 +253,9 @@ __all__ = [
     "PendingTile",
     "permute_start",
     "ring_shift_start",
+    "shard_all_gather_start",
+    "shard_all_reduce_start",
+    "shard_reduce_scatter_start",
     "shard_ring_shift",
     "shard_ring_shift_start",
     "wait",

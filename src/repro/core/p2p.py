@@ -49,11 +49,12 @@ the per-rank valid extents ride the request object's result bag, and a
 transfer hands the receiver the sender's counts — ``ring_shift`` on a
 ragged bag rotates the extents table together with the tiles.
 
-Model-stack rings (sequence-parallel ring attention, which runs *inside* a
-``shard_map`` body on raw per-device arrays rather than on ``DistBag``)
-use the shard-level twins :func:`shard_ring_shift` /
-:func:`shard_ring_shift_start` — same request object, same completion
-semantics, no bag plumbing.
+Model-stack collectives (sequence-parallel ring attention and the
+tensor-parallel decode path, which run *inside* ``shard_map`` bodies on raw
+per-device arrays rather than on ``DistBag``) use the shard-level twins
+:func:`shard_ring_shift_start`, :func:`shard_all_reduce_start`,
+:func:`shard_all_gather_start`, and :func:`shard_reduce_scatter_start` —
+same request object, same completion semantics, no bag plumbing.
 
 Semantics in the XLA world: a started transfer is a value with *no data
 dependence on any compute issued between start and wait*, so the scheduler is
@@ -93,6 +94,9 @@ __all__ = [
     "ring_shift_start",
     "shard_ring_shift",
     "shard_ring_shift_start",
+    "shard_all_reduce_start",
+    "shard_all_gather_start",
+    "shard_reduce_scatter_start",
     "wait",
 ]
 
@@ -287,6 +291,42 @@ def shard_ring_shift_start(x, axis_name: str, shift: int = 1) -> Pending:
     this *before* the step's local attention and waits after, exactly like
     the SUMMA ring issues its panel rotation before the local GEMM."""
     return Pending(shard_ring_shift(x, axis_name, shift), op="ring_shift")
+
+
+def shard_all_reduce_start(x, axis_name: str) -> Pending:
+    """Inside-``shard_map`` ``MPI_Iallreduce`` (sum): issue the reduction of
+    a pytree of per-device partials over ``axis_name`` and return a
+    :class:`Pending`.  The tensor-parallel decode path issues one of these
+    per microbatch per block stage and completes it behind the *next*
+    microbatch's local math (the :func:`repro.core.plan.stagger` schedule)."""
+    return Pending(
+        jax.tree_util.tree_map(lambda a: jax.lax.psum(a, axis_name), x),
+        op="all_reduce",
+    )
+
+
+def shard_all_gather_start(x, axis_name: str, *, axis: int = 0, tiled: bool = True) -> Pending:
+    """Inside-``shard_map`` ``MPI_Iallgather``: concatenate every rank's
+    shard of ``x`` along ``axis`` in rank order (``tiled=True``) and return a
+    :class:`Pending` — e.g. regathering the vocab-sharded decode logits."""
+    return Pending(
+        jax.tree_util.tree_map(
+            lambda a: jax.lax.all_gather(a, axis_name, axis=axis, tiled=tiled), x
+        ),
+        op="all_gather",
+    )
+
+
+def shard_reduce_scatter_start(x, axis_name: str, *, axis: int = 0) -> Pending:
+    """Inside-``shard_map`` ``MPI_Ireduce_scatter`` (sum): reduce the
+    per-device partials over ``axis_name`` and hand each rank its own
+    ``axis`` slice of the result."""
+    return Pending(
+        jax.tree_util.tree_map(
+            lambda a: jax.lax.psum_scatter(a, axis_name, scatter_dimension=axis, tiled=True), x
+        ),
+        op="reduce_scatter",
+    )
 
 
 def send_recv(

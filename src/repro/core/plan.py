@@ -12,10 +12,10 @@ bit-identical by construction (the repo-wide ``*_start(...).wait()``
 invariant of :mod:`repro.core.request` lifted to whole schedules).
 
 Each plan also carries its *declared overlap intent*
-(:attr:`CommPlan.intent`): ring and halo schedules give the XLA scheduler
-an issue/complete window with independent compute inside it, so they
-declare ``"overlapped"``; a pipeline chains compute -> transfer -> compute
-through data dependence, so it declares ``"serialized"``.  The intent is a
+(:attr:`CommPlan.intent`): ring, halo, and stagger schedules give the XLA
+scheduler an issue/complete window with independent compute inside it, so
+they declare ``"overlapped"``; a pipeline chains compute -> transfer ->
+compute through data dependence, so it declares ``"serialized"``.  The intent is a
 verifiable contract: :func:`repro.launch.hlo_walk.plan_agreement` checks
 the declared intent against what the HLO walker *proves* about the
 compiled program, and the tier-1 dry-run gates fail on disagreement.
@@ -86,9 +86,14 @@ from typing import Any, Callable
 
 from .request import Pending
 
-__all__ = ["CommPlan", "ring", "halo", "pipeline", "intent_of"]
+__all__ = ["CommPlan", "ring", "halo", "pipeline", "stagger", "intent_of"]
 
-_INTENTS = {"ring": "overlapped", "halo": "overlapped", "pipeline": "serialized"}
+_INTENTS = {
+    "ring": "overlapped",
+    "halo": "overlapped",
+    "pipeline": "serialized",
+    "stagger": "overlapped",
+}
 
 
 def intent_of(kind: str) -> str:
@@ -103,8 +108,8 @@ def intent_of(kind: str) -> str:
 class CommPlan:
     """A declared communication schedule (see module docstring).
 
-    Build with :func:`ring`, :func:`halo`, or :func:`pipeline`; execute
-    with :meth:`run`.  The planner — not the algorithm — places the
+    Build with :func:`ring`, :func:`halo`, :func:`pipeline`, or
+    :func:`stagger`; execute with :meth:`run`.  The planner — not the algorithm — places the
     issue/wait points, so every consumer gets the double-buffered form and
     its bit-identical blocking interpretation for free.
     """
@@ -149,6 +154,27 @@ class CommPlan:
         ``double_buffer=False`` starts and waits back-to-back at the
         completion point — same issue path, bit-identical results.
         """
+        if self.kind == "stagger":
+            # round-robin over independent steps (microbatches): every step
+            # computes its own partial and issues its own collective; no step
+            # consumes another's result, so each transfer's completion hides
+            # behind the *other* steps' compute — the continuous-batching
+            # decode schedule (microbatch i's reduction behind microbatch
+            # i+1's math).  The blocking form completes each transfer before
+            # the next issue; the waits are pure completion points
+            # (optimization barriers), so both forms are bit-identical.
+            if double_buffer:
+                pends = [
+                    self._issue(self.compute(carry, state, s), s)
+                    for s in range(self.steps)
+                ]
+                done = [p.wait() for p in pends]
+            else:
+                done = [
+                    self._issue(self.compute(carry, state, s), s).wait()
+                    for s in range(self.steps)
+                ]
+            return self._finish(done, state)
         if self.kind == "pipeline":
             # compute -> transfer -> compute chained through data
             # dependence: the transfer ships the value that was just
@@ -216,3 +242,23 @@ def pipeline(
     the next compute — serialized by data dependence.  Declared intent:
     ``"serialized"`` (the negative control for plan/HLO agreement)."""
     return CommPlan("pipeline", steps, transfer, compute, epilogue)
+
+
+def stagger(
+    steps: int,
+    *,
+    transfer: Callable[[Any, int], Pending],
+    compute: Callable[[Any, Any, int], Any],
+    epilogue: Callable[[Any, Any], Any] | None = None,
+) -> CommPlan:
+    """Declare a round-robin schedule over *independent* steps: each step's
+    ``compute`` produces a fresh partial and ``transfer`` issues its
+    collective (e.g. the tensor-parallel ``Iallreduce`` of a decode
+    microbatch); no step consumes another step's transferred result, so
+    every collective completes behind the sibling steps' compute.  This is
+    the continuous-batching decode schedule — with one step (one
+    microbatch) the collective sits alone on the compute chain and
+    serializes; with two or more, each reduction hides behind the other
+    microbatch's math.  ``epilogue(done, state)`` receives the list of
+    completed results in step order.  Declared intent: ``"overlapped"``."""
+    return CommPlan("stagger", steps, transfer, compute, epilogue)

@@ -24,12 +24,13 @@ Usage:
          --set moe_capacity_factor=1.0 --microbatches 4
   python -m repro.launch.dryrun --summa-gemm   # SUMMA ring: 0 serialized gate
   python -m repro.launch.dryrun --sp-ring      # ring attention: same gate
+  python -m repro.launch.dryrun --serve        # serving TP decode: same gate
 
-The three program gates (--summa-gemm / --uneven / --sp-ring) also assert
-*plan/HLO agreement*: each program's declared comm-plan intent
+The program gates (--summa-gemm / --uneven / --sp-ring / --serve) also
+assert *plan/HLO agreement*: each program's declared comm-plan intent
 (repro.core.plan) must match what the HLO walker proves about the compiled
-artifact.  ``--plan-report out.json`` runs all three and writes the per-plan
-agreement table (the nightly CI artifact).
+artifact.  ``--plan-report out.json`` runs all of them and writes the
+per-plan agreement table (the nightly CI artifact).
 """
 
 import argparse
@@ -294,12 +295,14 @@ def sp_ring_dryrun(*, batch: int = 2, seq: int = 256, d_model: int = 64,
     (padded capacity KV chunks + masked scores): the walker's permute bytes
     then include the padding, so the report scales them by the statically
     known valid fraction ``seq / (R * cap)`` — the sp_ring twin of the
-    ragged SUMMA's valid-bytes accounting.  The ragged trace also carries
-    one *boundary* collective outside the ring plan: XLA all-gathers the
-    padded seq-sharded output to slice it back to ``seq`` rows.  That
-    reshard is the caller's (and genuinely on the critical path), so the
-    plan agreement is scoped to the plan's own collective kind
-    (``collective-permute``) and the boundary count is reported separately.
+    ragged SUMMA's valid-bytes accounting.  The ragged pad slice used to be
+    a mid-graph boundary reshard (XLA all-gathered the padded seq-sharded
+    output just to slice it): the attention op now projects on the padded
+    seq and slices *last*, so the slice is terminal and nothing serializes
+    — ``boundary_serialized`` must be 0 for dense AND ragged traces.  The
+    plan agreement stays scoped to the plan's own collective kind
+    (``collective-permute``); the boundary count is reported separately as
+    a regression tripwire.
     """
     from types import SimpleNamespace
 
@@ -367,6 +370,59 @@ def sp_ring_dryrun(*, batch: int = 2, seq: int = 256, d_model: int = 64,
     return out
 
 
+def serve_dryrun(*, arch: str = "phi4-mini-3.8b", slots: int = 8,
+                 max_len: int = 64, grid: tuple[int, int] = (4, 2),
+                 microbatches: int = 2, verbose: bool = True) -> dict:
+    """Dry-run the serving engine's explicit tensor-parallel decode step
+    (:func:`repro.serve.tp_decode.make_tp_decode_step`): lower + compile one
+    continuous-batching decode step on a (data, model) fake mesh and
+    classify every collective of every kind.
+
+    The acceptance gate: with ``microbatches >= 2`` the staggered schedule
+    serializes **nothing** — each microbatch's per-layer ``Iallreduce`` (and
+    the terminal logits ``Iallgather``) completes behind the next
+    microbatch's compute, so no collective sits on the decode critical path
+    — and the declared plan intent (``stagger`` -> overlapped) must agree
+    with the proven HLO verdict.  The same program with ``microbatches=1``
+    is the negative control: no sibling compute exists, the reductions land
+    on the def-use chain, and the walker must see serialized collectives —
+    proving the gate measures the schedule, not walker blindness.
+    """
+    from repro.core.compat import make_mesh
+    from repro.launch import hlo_walk
+    from repro.serve.tp_decode import DECODE_TP_PLAN_INTENT, make_tp_decode_step
+
+    cfg = configs.get(arch, smoke=True)
+    mesh = make_mesh(grid, ("data", "model"))
+    params = _abstract(jax.eval_shape(lambda: lm.init_model(cfg, jax.random.PRNGKey(0))))
+    state = lm.DecodeState(
+        caches=_abstract(jax.eval_shape(lambda: lm.init_cache(cfg, slots, max_len))),
+        positions=jax.ShapeDtypeStruct((slots,), np.int32),
+    )
+    tokens_in = cfg.input_kind != "embeds"
+    batch = {"tokens": jax.ShapeDtypeStruct((slots, 1), np.int32)} if tokens_in \
+        else {"embeds": jax.ShapeDtypeStruct((slots, 1, cfg.d_model), np.float32)}
+    active = jax.ShapeDtypeStruct((slots,), np.bool_)
+
+    out: dict = {"arch": arch, "slots": slots, "max_len": max_len,
+                 "grid": list(grid), "microbatches": microbatches}
+    for variant, mb in (("staggered", microbatches), ("single", 1)):
+        step = make_tp_decode_step(cfg, mesh, slots=slots, microbatches=mb)
+        compiled = jax.jit(step).lower(params, state, batch, active).compile()
+        st = hlo_walk.analyze(compiled.as_text())
+        out[variant] = {
+            "collectives": len(st.collectives),
+            "overlapped": st.collectives_overlapped(),
+            "serialized": st.collectives_serialized(),
+            "exposed_bytes": st.exposed_collective_bytes(),
+            "overlap_by_kind": st.overlap_by_kind(),
+            "plan": hlo_walk.plan_agreement(st, DECODE_TP_PLAN_INTENT),
+        }
+    if verbose:
+        print(json.dumps(out, indent=1))
+    return out
+
+
 def _mem_dict(mem):
     if mem is None:
         return {}
@@ -417,6 +473,17 @@ def plan_report(path: str, verbose: bool = True) -> int:
                 "exposed_bytes": cell["exposed_bytes"],
                 "overlap_by_kind": cell["overlap_by_kind"],
             })
+    serve = serve_dryrun(verbose=False)
+    rows.append({
+        "program": "serve_tp_decode",
+        "variant": "staggered",
+        **serve["staggered"]["plan"],
+        "exposed_bytes": serve["staggered"]["exposed_bytes"],
+        "overlap_by_kind": serve["staggered"]["overlap_by_kind"],
+        # unstaggered schedule's serialized count (must be > 0): evidence the
+        # walker sees the reductions when nothing hides them
+        "negative_control_serialized": serve["single"]["serialized"],
+    })
     disagreements = [r for r in rows if not r["agree"]]
     report = {
         "plans": rows,
@@ -479,10 +546,20 @@ def main() -> None:
     # 35 is odd AND 3 mod 4: every dim is genuinely ragged on the default grid
     ap.add_argument("--uneven-dims", default="35,35,35", help="ni,nj,nk for --uneven")
     ap.add_argument("--uneven-grid", default="2x4", help="rows x cols for --uneven")
+    ap.add_argument("--serve", action="store_true",
+                    help="serving TP-decode dry run: lower one continuous-"
+                         "batching decode step (staggered microbatch comm "
+                         "plan) and assert 0 serialized collectives + "
+                         "plan/HLO agreement")
+    ap.add_argument("--serve-grid", default="4x2", help="data x model for --serve")
+    ap.add_argument("--serve-slots", type=int, default=8, help="batch slots for --serve")
+    ap.add_argument("--serve-microbatches", type=int, default=2,
+                    help="stagger depth for --serve (1 = negative control)")
     ap.add_argument("--plan-report", default=None, metavar="PATH",
-                    help="run all three comm-plan dry runs (SUMMA, ragged "
-                         "SUMMA, sp ring — dense and ragged seq) and write "
-                         "the per-plan overlap/agreement table as JSON")
+                    help="run every comm-plan dry run (SUMMA, ragged SUMMA, "
+                         "sp ring — dense and ragged seq — and the serving "
+                         "TP decode) and write the per-plan overlap/"
+                         "agreement table as JSON")
     args = ap.parse_args()
 
     if args.plan_report:
@@ -517,9 +594,21 @@ def main() -> None:
         for v in ("double_buffered", "blocking"):
             bad += rep[v]["plan"]["serialized"]  # ring permutes on the chain
             bad += 0 if rep[v]["plan"]["agree"] else 1
-            if not rep["ragged_seq"]:
-                # dense traces have no boundary reshard: nothing may serialize
-                bad += rep[v]["serialized"]
+            # dense AND ragged: nothing may serialize — the ragged pad slice
+            # is fused behind the output projection (terminal, off-chain)
+            bad += rep[v]["serialized"]
+        raise SystemExit(1 if bad else 0)
+
+    if args.serve:
+        grid = tuple(int(x) for x in args.serve_grid.split("x"))
+        rep = serve_dryrun(grid=grid, slots=args.serve_slots,
+                           microbatches=args.serve_microbatches)
+        stag = rep["staggered"]
+        bad = stag["serialized"]  # 0 serialized collectives per decode step
+        bad += 0 if stag["plan"]["agree"] else 1
+        # negative control: the unstaggered schedule must show the reductions
+        # on the chain, or the gate is measuring walker blindness
+        bad += 0 if rep["single"]["serialized"] > 0 else 1
         raise SystemExit(1 if bad else 0)
 
     os.makedirs(args.out, exist_ok=True)

@@ -29,6 +29,7 @@ from repro.core.p2p import shard_ring_shift_start
 from repro.core.plan import intent_of, ring
 from repro.kernels import ops
 from .module import pspec
+from .numerics import pin
 from .sharding import _fit_spec, current_recipe, shard_act
 
 # ------------------------------------------------------------------ RoPE ----
@@ -41,9 +42,14 @@ def rope_angles(positions, dim: int, theta: float = 10000.0):
 
 
 def apply_rope(x, cos, sin):
-    """x (..., S, D even); cos/sin (S, D/2) or broadcastable."""
+    """x (..., S, D even); cos/sin (S, D/2) — shared angles — or (B, S, D/2)
+    for per-row positions (continuous batching: every slot rotates at its own
+    absolute position)."""
     x1, x2 = jnp.split(x, 2, axis=-1)
-    shape = [1] * (x.ndim - 2) + list(cos.shape)
+    if cos.ndim == 2:
+        shape = [1] * (x.ndim - 2) + list(cos.shape)
+    else:  # batched (B, S, D/2): broadcast over the head dims between B and S
+        shape = [cos.shape[0]] + [1] * (x.ndim - cos.ndim) + list(cos.shape[1:])
     c = cos.reshape(shape)
     s = sin.reshape(shape)
     return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
@@ -172,7 +178,8 @@ def _ring_attention_local(q, k, v, *, axis_name: str, causal: bool, double_buffe
 
 
 def ring_attention_seq(q, k, v, *, mesh, axis_name: str = "model", q_spec=None,
-                       kv_spec=None, causal: bool = True, double_buffer: bool = True):
+                       kv_spec=None, causal: bool = True, double_buffer: bool = True,
+                       slice_output: bool = True):
     """Sequence-parallel ring attention over the ``axis_name`` mesh axis.
 
     The distributed twin of :func:`attention_seq`: q (B,H,S,D) and k/v
@@ -220,7 +227,12 @@ def ring_attention_seq(q, k, v, *, mesh, axis_name: str = "model", q_spec=None,
 
     out = shard_map(body, mesh=mesh, in_specs=(q_spec, kv_spec, kv_spec),
                     out_specs=q_spec)(q, k, v)
-    return out[:, :, :S] if valid_len is not None else out
+    # ``slice_output=False`` hands the padded (B,H,R*cap,D) output back to the
+    # caller so the pad slice can ride *through* the per-position output
+    # projection and land terminal (nothing downstream), instead of sitting
+    # between the ring and the projection where GSPMD reshards it with a
+    # serialized all-gather (the carried-over boundary-reshard bug).
+    return out[:, :, :S] if (valid_len is not None and slice_output) else out
 
 
 def _ring_applicable(recipe, q, k) -> bool:
@@ -236,31 +248,47 @@ def _ring_applicable(recipe, q, k) -> bool:
     return R > 1 and S >= 1 and k.shape[2] == S and q.shape[1] % k.shape[1] == 0
 
 
-def attention_decode(q, k_cache, v_cache, cache_len):
-    """q (B,H,1,D); caches (B,G,S,D); positions >= cache_len are masked.
+def attention_decode(q, k_cache, v_cache, cache_len, *, q_positions=None):
+    """q (B,H,S,D) new queries; caches (B,G,T,D); positions >= cache_len are
+    masked.  ``q_positions`` (B,S) are the queries' absolute positions: cache
+    slot ``t`` is visible to query ``j`` iff ``t <= q_positions[b, j]`` —
+    the causal mask *within* a multi-token chunk (whole-prompt prefill) and
+    the per-slot mask under continuous batching, where each batch row sits
+    at its own position.  With S == 1 and uniform positions this reduces to
+    the classic single-token decode mask.
 
     Dense streaming attention: reading the whole cache is the roofline
     minimum for decode; softmax reductions over a sharded cache-seq dim
     become the distributed flash-decoding merge under GSPMD.
     """
-    B, Hq, _, D = q.shape
-    _, G, S, _ = k_cache.shape
+    B, Hq, S, D = q.shape
+    _, G, T, _ = k_cache.shape
     rep = Hq // G
     # the cache streams stay in their storage dtype (bf16); scores and the
     # p@v contraction accumulate in f32 — reading the cache IS the decode
     # roofline term, so it is never widened in HBM
-    qg = q.reshape(B, G, rep, 1, D)
+    qg = q.reshape(B, G, rep, S, D)
     s = jnp.einsum("bgrqd,bgsd->bgrqs", qg, k_cache, preferred_element_type=jnp.float32)
     s = s * (D ** -0.5)
     # ring-buffer aware: once length exceeds the cache size (windowed cache),
     # every slot is valid
-    valid = jnp.minimum(cache_len.reshape(B, 1, 1, 1, 1), S)
-    mask = jnp.arange(S)[None, None, None, None, :] < valid
+    valid = jnp.minimum(cache_len.reshape(B, 1, 1, 1, 1), T)
+    mask = jnp.arange(T)[None, None, None, None, :] < valid
+    if q_positions is not None:
+        mask = mask & (
+            jnp.arange(T)[None, None, None, None, :]
+            <= q_positions.reshape(B, 1, 1, S, 1)
+        )
     s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bgrqs,bgsd->bgrqd", p.astype(v_cache.dtype), v_cache,
+    # the probabilities round to the cache dtype *before* the p@v
+    # contraction; under pinned rounding (serving decode) a barrier stops
+    # XLA from folding that round into the f32 dot, so every caller —
+    # single-host or distributed — contracts the identical rounded weights
+    p = pin(p.astype(v_cache.dtype))
+    o = jnp.einsum("bgrqs,bgsd->bgrqd", p, v_cache,
                    preferred_element_type=jnp.float32)
-    return o.reshape(B, Hq, 1, D).astype(q.dtype)
+    return o.reshape(B, Hq, S, D).astype(q.dtype)
 
 
 # ---------------------------------------------------------------- GQA op ----
@@ -274,53 +302,98 @@ class KVCache(NamedTuple):
 def gqa_attention(p, x, *, n_heads: int, n_kv: int, head_dim: int, rope_theta: float = 10000.0,
                   positions=None, cache: KVCache | None = None, causal: bool = True,
                   attn_impl: str | None = None, block: int = 512, attn_mixed: bool | None = None,
-                  sp_ring_double_buffer: bool = True):
-    """x (B,S,m) -> (B,S,m).  ``cache`` switches to decode mode (S==1).
+                  sp_ring_double_buffer: bool = True, new_counts=None, prefill: bool = False):
+    """x (B,S,m) -> (B,S,m).  ``cache`` switches to decode mode.
+
+    Decode accepts multi-token chunks (S >= 1) and *per-row* state:
+    ``positions`` may be (B,S) absolute positions (each slot rotates RoPE and
+    masks causally at its own offset) and ``new_counts`` (B,) says how many
+    of the chunk's S tokens are valid per row — the per-request extents of
+    continuous batching.  Rows advance their cache length by their own count;
+    the caller masks cache writes of count-0 rows (see
+    ``repro.models.lm.decode_step``).  ``prefill=True`` marks a whole-prompt
+    chunk whose active rows all start at position 0; under an ``sp_ring``
+    recipe that chunk runs the ring-attention plan (sequence-parallel batched
+    prefill) while the K/V writes fill the cache.
 
     Under an active ``sp_ring`` recipe the seq path runs
     :func:`ring_attention_seq` (double-buffered KV rotation over the
     ``model`` axis; ``sp_ring_double_buffer=False`` selects the blocking
     reference variant, bit-identical at f32)."""
     B, S, _ = x.shape
-    q = shard_act(jnp.einsum("bsm,mhd->bhsd", x, p["wq"].astype(x.dtype)), "q")
-    k = shard_act(jnp.einsum("bsm,mgd->bgsd", x, p["wk"].astype(x.dtype)), "kv")
-    v = shard_act(jnp.einsum("bsm,mgd->bgsd", x, p["wv"].astype(x.dtype)), "kv")
+    q = shard_act(pin(jnp.einsum("bsm,mhd->bhsd", x, p["wq"].astype(x.dtype))), "q")
+    k = shard_act(pin(jnp.einsum("bsm,mgd->bgsd", x, p["wk"].astype(x.dtype))), "kv")
+    v = shard_act(pin(jnp.einsum("bsm,mgd->bgsd", x, p["wv"].astype(x.dtype))), "kv")
     if "bq" in p:
-        q = q + p["bq"].astype(x.dtype)[None, :, None, :]
-        k = k + p["bk"].astype(x.dtype)[None, :, None, :]
-        v = v + p["bv"].astype(x.dtype)[None, :, None, :]
+        q = pin(q + p["bq"].astype(x.dtype)[None, :, None, :])
+        k = pin(k + p["bk"].astype(x.dtype)[None, :, None, :])
+        v = pin(v + p["bv"].astype(x.dtype)[None, :, None, :])
     if positions is None:
         positions = jnp.arange(S)
     cos, sin = rope_angles(positions, head_dim, rope_theta)
-    q = apply_rope(q, cos, sin)
-    k = apply_rope(k, cos, sin)
+    q = pin(apply_rope(q, cos, sin))
+    k = pin(apply_rope(k, cos, sin))
+    recipe = current_recipe()
     if cache is not None:
+        adv = S if new_counts is None else new_counts
         kc = shard_act(_cache_update(cache.k, k, cache.length), "cache_kv")
         vc = shard_act(_cache_update(cache.v, v, cache.length), "cache_kv")
-        new_cache = KVCache(kc, vc, cache.length + S)
-        o = attention_decode(q, kc, vc, cache.length + S)
-        out = jnp.einsum("bhsd,hdm->bsm", o, p["wo"].astype(x.dtype))
+        new_len = cache.length + adv
+        new_cache = KVCache(kc, vc, new_len)
+        if prefill and _ring_applicable(recipe, q, k):
+            # whole-prompt prefill chunk: active rows start at position 0, so
+            # the chunk's causal attention IS full attention over the prompt
+            # — run the sequence-parallel ring plan on the fresh Q/K/V while
+            # the writes above fill the cache for the decode steps to stream.
+            o = ring_attention_seq(
+                q, k, v, mesh=recipe.mesh, axis_name="model",
+                q_spec=recipe.spec("q"), kv_spec=recipe.spec("kv"),
+                causal=causal, double_buffer=sp_ring_double_buffer,
+                slice_output=False,
+            )
+            o = shard_act(o, "attn_out")
+            out = jnp.einsum("bhsd,hdm->bsm", o, p["wo"].astype(x.dtype))
+            # project on the padded seq (the einsum is per-position, so valid
+            # rows are bitwise unchanged) and slice last: the ragged pad
+            # slice is terminal instead of a mid-graph reshard.
+            return shard_act(out, "hidden")[:, :S], new_cache
+        q_pos = positions if getattr(positions, "ndim", 1) == 2 else None
+        o = pin(attention_decode(q, kc, vc, new_len, q_positions=q_pos))
+        out = pin(jnp.einsum("bhsd,hdm->bsm", o, p["wo"].astype(x.dtype)))
         return shard_act(out, "hidden"), new_cache
-    recipe = current_recipe()
     if _ring_applicable(recipe, q, k):
         o = ring_attention_seq(
             q, k, v, mesh=recipe.mesh, axis_name="model",
             q_spec=recipe.spec("q"), kv_spec=recipe.spec("kv"),
             causal=causal, double_buffer=sp_ring_double_buffer,
+            slice_output=False,
         )
         o = shard_act(o, "attn_out")
-    else:
-        o = shard_act(attention_seq(q, k, v, causal=causal, impl=attn_impl, block=block, mixed=attn_mixed), "attn_out")
+        out = jnp.einsum("bhsd,hdm->bsm", o, p["wo"].astype(x.dtype))
+        # ragged boundary-reshard fix: the pad slice rides through the
+        # per-position output projection and lands terminal — nothing
+        # downstream consumes it, so GSPMD has no reshard to serialize.
+        # (Dividing lengths return unpadded and the slice is a no-op.)
+        return shard_act(out, "hidden")[:, :S], None
+    o = shard_act(attention_seq(q, k, v, causal=causal, impl=attn_impl, block=block, mixed=attn_mixed), "attn_out")
     return shard_act(jnp.einsum("bhsd,hdm->bsm", o, p["wo"].astype(x.dtype)), "hidden"), None
 
 
 def _cache_update(cache, new, length):
-    """Insert S new steps at position ``length`` (same for all batch rows).
+    """Insert S new steps at each row's *own* position ``length[b]``.
 
-    Writes at ``length % cache_size``: a no-op modulo for full-length caches
-    and ring-buffer semantics for windowed caches (Zamba2 long-context)."""
-    pos = length[0] % cache.shape[2]
-    return jax.lax.dynamic_update_slice(cache, new.astype(cache.dtype), (0, 0, pos, 0))
+    Per-row writes (vmapped ``dynamic_update_slice``) are what make
+    continuous batching sound: slots sit at different sequence positions, so
+    a shared write offset would clobber resident requests' K/V (the old
+    ``length[0]`` bug).  Writes land at ``length[b] % cache_size``: a no-op
+    modulo for full-length caches and ring-buffer semantics for windowed
+    caches (Zamba2 long-context)."""
+    size = cache.shape[2]
+
+    def row(c, n, p):
+        return jax.lax.dynamic_update_slice(c, n, (0, p, 0))
+
+    return jax.vmap(row)(cache, new.astype(cache.dtype), length % size)
 
 
 # ---------------------------------------------------------------- MLA op ----
@@ -338,13 +411,21 @@ def _rms(x, w, eps=1e-6):
 
 def mla_attention(p, x, *, n_heads: int, d_nope: int, d_rope: int, d_v: int, rope_theta: float = 10000.0,
                   positions=None, cache: MLACache | None = None, attn_impl: str | None = None,
-                  block: int = 512, attn_mixed: bool | None = None):
+                  block: int = 512, attn_mixed: bool | None = None, new_counts=None,
+                  prefill: bool = False):
     """Multi-head Latent Attention (MiniCPM3/DeepSeek-V2 style).
 
     Train/prefill: decompress per-head K/V and run flash attention.
     Decode: the *absorbed* form — scores against the compressed latent cache
     (the cache layout is (B,S,kv_rank)+(B,S,d_rope): 288 instead of
-    2*40*96 = 7680 floats per token — MLA's reason to exist)."""
+    2*40*96 = 7680 floats per token — MLA's reason to exist).
+
+    Like :func:`gqa_attention`, decode accepts multi-token chunks with
+    per-row (B,S) ``positions`` and (B,) ``new_counts``: the absorbed scores
+    mask cache slot ``t`` to ``t <= positions[b, j]``, which makes a
+    whole-prompt chunk exact causal prefill straight through the latent
+    cache, so ``prefill`` needs no separate branch here (accepted for API
+    symmetry)."""
     B, S, _ = x.shape
     cq = _rms(jnp.einsum("bsm,mq->bsq", x, p["wdq"].astype(x.dtype)), p["q_norm"])
     q = jnp.einsum("bsq,qhc->bhsc", cq, p["wuq"].astype(x.dtype))
@@ -368,9 +449,10 @@ def mla_attention(p, x, *, n_heads: int, d_nope: int, d_rope: int, d_v: int, rop
         return jnp.einsum("bhsw,hwm->bsm", o, p["wo"].astype(x.dtype)), None
 
     # ---- absorbed decode ----
+    adv = S if new_counts is None else new_counts
     cc = shard_act(_seq_cache_update(cache.c, c, cache.length), "cache_mla")
     krc = shard_act(_seq_cache_update(cache.kr, kr, cache.length), "cache_mla")
-    new_cache = MLACache(cc, krc, cache.length + S)
+    new_cache = MLACache(cc, krc, cache.length + adv)
     # absorb W_uk into q: q_abs (B,H,1,k_rank)
     q_abs = jnp.einsum("bhsn,khn->bhsk", q_nope, p["wuk"].astype(x.dtype))
     scale = (d_nope + d_rope) ** -0.5
@@ -379,7 +461,12 @@ def mla_attention(p, x, *, n_heads: int, d_nope: int, d_rope: int, d_v: int, rop
         + jnp.einsum("bhsr,btr->bhst", q_rope.astype(jnp.float32), krc.astype(jnp.float32))
     ) * scale
     T = cc.shape[1]
-    mask = jnp.arange(T)[None, None, None, :] < (cache.length + S).reshape(B, 1, 1, 1)
+    mask = jnp.arange(T)[None, None, None, :] < (cache.length + adv).reshape(B, 1, 1, 1)
+    if getattr(positions, "ndim", 1) == 2:
+        # per-row chunk causality: slot t visible to query j iff t <= pos[b,j]
+        mask = mask & (
+            jnp.arange(T)[None, None, None, :] <= positions.reshape(B, 1, S, 1)
+        )
     s = jnp.where(mask, s, -1e30)
     pr = jax.nn.softmax(s, axis=-1)
     o_lat = jnp.einsum("bhst,btk->bhsk", pr, cc.astype(jnp.float32)).astype(x.dtype)
@@ -395,7 +482,14 @@ def _pad_last(v, d: int):
 
 
 def _seq_cache_update(cache, new, length):
-    return jax.lax.dynamic_update_slice(cache, new.astype(cache.dtype), (0, length[0]) + (0,) * (cache.ndim - 2))
+    """Per-row seq-dim cache insert (MLA latent / rope-key caches): row ``b``
+    writes at its own ``length[b]`` — see :func:`_cache_update`."""
+    size = cache.shape[1]
+
+    def row(c, n, p):
+        return jax.lax.dynamic_update_slice(c, n, (p,) + (0,) * (c.ndim - 1))
+
+    return jax.vmap(row)(cache, new.astype(cache.dtype), length % size)
 
 
 # ------------------------------------------------------- cross-attention ----

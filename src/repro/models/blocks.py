@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from .module import pspec
+from .numerics import pin
 from . import attention as attn
 from . import ffn as ffn_mod
 from . import ssm as ssm_mod
@@ -47,25 +48,30 @@ def attn_block_specs(cfg) -> dict:
     return s
 
 
-def attn_block(p, x, cfg, *, cache=None, positions=None):
-    """Pre-norm attention + FFN. Returns (x, new_cache, aux_loss)."""
+def attn_block(p, x, cfg, *, cache=None, positions=None, new_counts=None, prefill=False):
+    """Pre-norm attention + FFN. Returns (x, new_cache, aux_loss).
+
+    ``new_counts``/``prefill`` thread the continuous-batching chunk metadata
+    to :func:`repro.models.attention.gqa_attention` (per-row valid token
+    counts; whole-prompt prefill chunk)."""
     h, new_cache = attn.gqa_attention(
-        p["attn"], rmsnorm(p["ln1"], x),
+        p["attn"], pin(rmsnorm(p["ln1"], x)),
         n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
         rope_theta=cfg.rope_theta, positions=positions, cache=cache,
         attn_impl=cfg.attn_impl, block=cfg.attn_block, attn_mixed=cfg.attn_mixed,
+        new_counts=new_counts, prefill=prefill,
     )
-    x = x + h
+    x = pin(x + h)
     aux = jnp.zeros((), jnp.float32)
     if cfg.ffn_kind == "moe":
         f, aux = ffn_mod.moe_ffn(p["ffn"], rmsnorm(p["ln2"], x), n_experts=cfg.n_experts,
                                  top_k=cfg.moe_top_k, capacity_factor=cfg.moe_capacity_factor,
                                  groups=cfg.moe_groups)
     elif cfg.ffn_kind == "gelu":
-        f = ffn_mod.gelu_mlp(p["ffn"], rmsnorm(p["ln2"], x))
+        f = ffn_mod.gelu_mlp(p["ffn"], pin(rmsnorm(p["ln2"], x)))
     else:
-        f = ffn_mod.swiglu(p["ffn"], rmsnorm(p["ln2"], x))
-    return x + f, new_cache, aux
+        f = ffn_mod.swiglu(p["ffn"], pin(rmsnorm(p["ln2"], x)))
+    return pin(x + f), new_cache, aux
 
 
 # -------------------------------------------------------------- MLA block ----
@@ -81,12 +87,13 @@ def mla_block_specs(cfg) -> dict:
     }
 
 
-def mla_block(p, x, cfg, *, cache=None, positions=None):
+def mla_block(p, x, cfg, *, cache=None, positions=None, new_counts=None, prefill=False):
     h, new_cache = attn.mla_attention(
         p["attn"], rmsnorm(p["ln1"], x),
         n_heads=cfg.n_heads, d_nope=cfg.mla_d_nope, d_rope=cfg.mla_d_rope, d_v=cfg.mla_d_v,
         rope_theta=cfg.rope_theta, positions=positions, cache=cache,
         attn_impl=cfg.attn_impl, block=cfg.attn_block, attn_mixed=cfg.attn_mixed,
+        new_counts=new_counts, prefill=prefill,
     )
     x = x + h
     f = ffn_mod.swiglu(p["ffn"], rmsnorm(p["ln2"], x))

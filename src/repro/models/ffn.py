@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from .module import pspec
+from .numerics import pin
 from .sharding import shard_act
 
 # ----------------------------------------------------------------- dense ----
@@ -28,10 +29,10 @@ def swiglu_specs(d_model: int, d_ff: int, dtype=jnp.float32):
 
 
 def swiglu(p, x):
-    g = shard_act(jnp.einsum("bsm,mf->bsf", x, p["w_gate"].astype(x.dtype)), "ffn_h")
-    u = shard_act(jnp.einsum("bsm,mf->bsf", x, p["w_up"].astype(x.dtype)), "ffn_h")
-    h = jax.nn.silu(g) * u
-    return shard_act(jnp.einsum("bsf,fm->bsm", h, p["w_down"].astype(x.dtype)), "hidden")
+    g = shard_act(pin(jnp.einsum("bsm,mf->bsf", x, p["w_gate"].astype(x.dtype))), "ffn_h")
+    u = shard_act(pin(jnp.einsum("bsm,mf->bsf", x, p["w_up"].astype(x.dtype))), "ffn_h")
+    h = pin(jax.nn.silu(g) * u)
+    return shard_act(pin(jnp.einsum("bsf,fm->bsm", h, p["w_down"].astype(x.dtype))), "hidden")
 
 
 def gelu_mlp_specs(d_model: int, d_ff: int, dtype=jnp.float32):
@@ -44,9 +45,9 @@ def gelu_mlp_specs(d_model: int, d_ff: int, dtype=jnp.float32):
 
 
 def gelu_mlp(p, x):
-    h = shard_act(jnp.einsum("bsm,mf->bsf", x, p["w_in"].astype(x.dtype)) + p["b_in"].astype(x.dtype), "ffn_h")
-    h = jax.nn.gelu(h)
-    return shard_act(jnp.einsum("bsf,fm->bsm", h, p["w_out"].astype(x.dtype)) + p["b_out"].astype(x.dtype), "hidden")
+    h = shard_act(pin(jnp.einsum("bsm,mf->bsf", x, p["w_in"].astype(x.dtype))) + p["b_in"].astype(x.dtype), "ffn_h")
+    h = pin(jax.nn.gelu(h))
+    return shard_act(pin(pin(jnp.einsum("bsf,fm->bsm", h, p["w_out"].astype(x.dtype))) + p["b_out"].astype(x.dtype)), "hidden")
 
 
 # ------------------------------------------------------------------- MoE ----

@@ -22,6 +22,7 @@ from . import attention as attn_mod
 from . import blocks as blk
 from . import ssm as ssm_mod
 from .module import pspec, stack_specs, init_params, abstract_params, tree_size
+from .numerics import pin
 from .sharding import shard_act
 
 # ================================================================= specs ====
@@ -82,9 +83,11 @@ def count_params(cfg, *, active_only: bool = False) -> int:
 # ============================================================= embeddings ====
 
 def _sinusoidal(positions, d: int):
+    """positions (...,) -> (..., d): works for shared (S,) and per-row (B,S)
+    position grids (continuous batching offsets every slot independently)."""
     half = d // 2
     freq = jnp.exp(-np.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
-    ang = positions.astype(jnp.float32)[:, None] * freq[None, :]
+    ang = positions.astype(jnp.float32)[..., None] * freq
     return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
 
 
@@ -94,17 +97,18 @@ def embed_inputs(params, batch, cfg, *, positions=None):
         x = batch["embeds"].astype(cfg.act_dtype)
         S = x.shape[1]
         pos = positions if positions is not None else jnp.arange(S)
-        x = x + _sinusoidal(pos, cfg.d_model).astype(cfg.act_dtype)[None]
+        pe = _sinusoidal(pos, cfg.d_model).astype(cfg.act_dtype)
+        x = pin(x + (pe if pe.ndim == 3 else pe[None]))
         return shard_act(x, "hidden")
     tokens = shard_act(batch["tokens"], "tokens")
-    x = params["embed"].astype(cfg.act_dtype)[tokens]
+    x = pin(params["embed"].astype(cfg.act_dtype)[tokens])
     return shard_act(x, "hidden")
 
 
 def lm_logits(params, x, cfg):
-    x = blk.rmsnorm(params["final_norm"], x)
+    x = pin(blk.rmsnorm(params["final_norm"], x))
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    logits = jnp.einsum("bsm,mv->bsv", x, head.astype(x.dtype))
+    logits = pin(jnp.einsum("bsm,mv->bsv", x, head.astype(x.dtype)))
     return shard_act(logits, "logits")
 
 
@@ -275,27 +279,69 @@ def init_cache(cfg, batch_size: int, max_len: int):
     raise ValueError(fam)
 
 
-def decode_step(params, state: DecodeState, batch, cfg):
+def _mask_rows(new, old, active):
+    """Restore batch rows ``active[b] == False`` of a cache/state pytree to
+    their pre-step values.  Continuous batching runs the full batch through
+    every step even when some slots carry no valid tokens — their cache
+    writes (and any length advance) are garbage and must not persist.  Every
+    leaf is (B, ...) inside the layer scans, so a broadcast ``where`` on the
+    leading dim is the whole merge."""
+    if active is None:
+        return new
+
+    def leaf(n, o):
+        return jnp.where(active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o)
+
+    return jax.tree.map(leaf, new, old)
+
+
+def decode_step(params, state: DecodeState, batch, cfg, *, new_counts=None,
+                prefill: bool = False):
     """One serve step: embed the new token(s), run all blocks against the
-    caches, return (logits, new DecodeState).  ``batch['tokens']`` (B, 1)
-    (or ``batch['embeds']`` (B, 1, m) for the audio family)."""
+    caches, return (logits, new DecodeState).  ``batch['tokens']`` (B, S)
+    (or ``batch['embeds']`` (B, S, m) for the audio family); S == 1 is the
+    classic decode step.
+
+    Continuous batching (per-row state):
+      * every batch row runs at its *own* absolute position
+        (``state.positions[b]``) — RoPE/sinusoidal offsets and causal masks
+        are per-row;
+      * ``new_counts`` (B,) int32 marks how many of the chunk's S tokens are
+        valid per row (0 = the slot is idle this step).  Idle rows' cache
+        writes are fully masked out (:func:`_mask_rows`) and their positions
+        do not advance — the fix for the cross-slot clobbering bug where one
+        slot's prefill wrote garbage K/V into every resident request's cache;
+      * ``prefill=True`` marks a whole-prompt chunk whose active rows start
+        at position 0 (admission-time batched prefill); under an ``sp_ring``
+        recipe the attention families run the chunk through the
+        sequence-parallel ring plan.
+    Rows may leave garbage *beyond* their valid count inside the cache
+    capacity — sound for non-windowed caches because the next write starts
+    at ``length + count`` and the attention mask never reads past ``length``.
+    """
     positions = state.positions
-    x = embed_inputs(params, batch, cfg, positions=positions[:1])
+    S = (batch["embeds"] if cfg.input_kind == "embeds" else batch["tokens"]).shape[1]
+    pos2d = positions[:, None] + jnp.arange(S, dtype=positions.dtype)[None, :]
+    active = None if new_counts is None else new_counts > 0
+    adv = S if new_counts is None else new_counts
+    x = embed_inputs(params, batch, cfg, positions=pos2d)
     fam = cfg.family
     caches = state.caches
 
     if fam in ("dense", "moe", "audio"):
         def body(x, layer):
             p, c = layer
-            x, new_c, _ = blk.attn_block(p, x, cfg, cache=c, positions=positions[:1])
-            return x, new_c
+            x, new_c, _ = blk.attn_block(p, x, cfg, cache=c, positions=pos2d,
+                                         new_counts=new_counts, prefill=prefill)
+            return x, _mask_rows(new_c, c, active)
 
         x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
     elif fam == "mla":
         def body(x, layer):
             p, c = layer
-            x, new_c, _ = blk.mla_block(p, x, cfg, cache=c, positions=positions[:1])
-            return x, new_c
+            x, new_c, _ = blk.mla_block(p, x, cfg, cache=c, positions=pos2d,
+                                        new_counts=new_counts, prefill=prefill)
+            return x, _mask_rows(new_c, c, active)
 
         x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
     elif fam == "vlm":
@@ -306,8 +352,9 @@ def decode_step(params, state: DecodeState, batch, cfg):
 
             def body(x, sl):
                 p, c = sl
-                x, new_c, _ = blk.attn_block(p, x, cfg, cache=c, positions=positions[:1])
-                return x, new_c
+                x, new_c, _ = blk.attn_block(p, x, cfg, cache=c, positions=pos2d,
+                                             new_counts=new_counts, prefill=prefill)
+                return x, _mask_rows(new_c, c, active)
 
             x, new_c_self = jax.lax.scan(body, x, (p_self, c_self))
             x = blk.cross_block(p_cross, x, enc, cfg)
@@ -321,7 +368,7 @@ def decode_step(params, state: DecodeState, batch, cfg):
         def body(x, layer):
             p, c = layer
             x, new_c, _ = blk.rwkv_block(p, x, cfg, state=c)
-            return x, new_c
+            return x, _mask_rows(new_c, c, active)
 
         x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
     elif fam == "hybrid":
@@ -331,14 +378,14 @@ def decode_step(params, state: DecodeState, batch, cfg):
             def body(x, ml):
                 p, c = ml
                 x, new_c, _ = blk.mamba_block(p, x, cfg, state=c)
-                return x, new_c
+                return x, _mask_rows(new_c, c, active)
 
             x, new_c_mamba = jax.lax.scan(body, x, (p_mamba, c_mamba))
             x, new_c_shared, _ = blk.shared_attn_block(
                 params["shared_block"], p_lora, x, cfg, cache=c_shared,
-                positions=positions[:1], window=cfg.shared_window,
+                positions=pos2d, window=cfg.shared_window,
             )
-            return x, (new_c_mamba, new_c_shared)
+            return x, (new_c_mamba, _mask_rows(new_c_shared, c_shared, active))
 
         x, (new_mamba, new_shared) = jax.lax.scan(
             group, x,
@@ -349,7 +396,7 @@ def decode_step(params, state: DecodeState, batch, cfg):
             def body(x, ml):
                 p, c = ml
                 x, new_c, _ = blk.mamba_block(p, x, cfg, state=c)
-                return x, new_c
+                return x, _mask_rows(new_c, c, active)
 
             x, new_tail = jax.lax.scan(body, x, (params["tail_blocks"], caches["tail"]))
             new_caches["tail"] = new_tail
@@ -357,7 +404,7 @@ def decode_step(params, state: DecodeState, batch, cfg):
         raise ValueError(fam)
 
     logits = lm_logits(params, x, cfg)
-    return logits, DecodeState(caches=new_caches, positions=positions + x.shape[1])
+    return logits, DecodeState(caches=new_caches, positions=positions + adv)
 
 
 # =============================================================== helpers ====

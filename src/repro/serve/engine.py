@@ -1,14 +1,32 @@
-"""Batched serving engine: prefill + decode with continuous batching.
+"""Distributed continuous-batching engine on the comm layer.
 
-A fixed pool of batch *slots* shares one KV cache allocation; finished
-sequences free their slot and the next queued request is prefilled into it.
-Sampling is greedy or temperature-based.  This is the single-host engine
-(used by examples/serve_lm.py and the serving tests); at scale the same
-``decode_step`` is the multi-pod dry-run's ``serve_step``.
+A fixed pool of batch *slots* shares one KV cache allocation tracked by a
+:class:`repro.serve.kv.KVLedger` — the ragged ``DistBag`` extents picture,
+per-request lengths over uniform capacity tiles.  Finished sequences free
+their slot and the next queued request is prefilled into it.
+
+Engine phases map onto the comm layer (see ``repro.core``'s "Serving on the
+comm layer" notes):
+
+  * **admission-time prefill** runs the whole prompt as one masked chunk
+    through ``lm.decode_step(prefill=True)``; under an ``sp_ring`` recipe
+    the chunk's attention is the sequence-parallel ring plan — the
+    ``Allgatherv``-over-seq-shards phase;
+  * **decode** runs either the GSPMD path (single host / recipe) or — given
+    a ``(data, model)`` mesh and ``microbatches`` — the explicit
+    tensor-parallel step of :mod:`repro.serve.tp_decode`, whose per-layer
+    reductions are issued as non-blocking ``Pending`` collectives staggered
+    behind the next microbatch's compute (``Iallreduce``/``Iallgather`` per
+    layer, nothing on the critical path — what ``--serve`` dry-runs gate).
+
+The single-host engine (no mesh) is the bitwise oracle the distributed
+configuration is tested against: same per-row cache semantics, same greedy
+sampling, token-for-token.
 """
 from __future__ import annotations
 
 import dataclasses
+from contextlib import nullcontext
 from typing import Any, Callable
 
 import jax
@@ -16,9 +34,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import lm
+from repro.models.numerics import pinned_rounding
 from repro.models.sharding import use_recipe
+from repro.serve.kv import KVLedger
 
 __all__ = ["ServeConfig", "Engine"]
+
+# families whose decode-path attention accepts multi-token chunks exactly
+# (position-masked reads over a length-tracked cache); recurrent/windowed
+# state (ssm, hybrid) and capacity-factor dispatch (moe) prefill per-token
+_CHUNK_FAMILIES = ("dense", "audio", "mla", "vlm")
 
 
 @dataclasses.dataclass
@@ -35,12 +60,72 @@ class _Slot:
     request_id: int | None = None
     tokens: list = dataclasses.field(default_factory=list)
     remaining: int = 0
+    next_embed: Any = None  # (m,) f32 — embeds-model feed for the next step
+
+
+def _np_sinusoidal(ids, d: int):
+    """Deterministic token-id featurizer for embeds-input models: the
+    engine-side stand-in for a codec/projection front end.  Distinct ids map
+    to distinct embeddings, so generation actually depends on the prompt
+    (the all-zeros-embedding bug fed every request the same silence)."""
+    ids = np.asarray(ids, np.float32)
+    half = d // 2
+    freq = np.exp(-np.log(10000.0) * np.arange(half, dtype=np.float32) / half)
+    ang = ids[..., None] * freq
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=-1).astype(np.float32)
+
+
+def _kv_bytes_per_pos(cfg) -> int:
+    """Cache bytes one sequence position costs across all layers (0 for
+    families whose state does not grow with length)."""
+    item = jnp.dtype(cfg.act_dtype).itemsize
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        return 2 * cfg.n_layers * cfg.n_kv * cfg.head_dim * item
+    if cfg.family == "mla":
+        return cfg.n_layers * (cfg.mla_kv_rank + cfg.mla_d_rope) * item
+    return 0
+
+
+def _reset_slot_rows(caches, i: int):
+    """Zero slot ``i``'s rows of every state leaf that is *not* masked by a
+    cache length (recurrent/shift/conv state carries forward unmasked, so a
+    released slot's state must not leak into its successor).  Length-masked
+    K/V payloads are skipped — their ``length`` rows are zeroed instead and
+    the attention mask never reads past it.  Axis rules are relative to the
+    trailing dims so they hold under any layer/super-block stacking."""
+
+    def leaf(path, x):
+        key = path[-1]
+        name = getattr(key, "name", getattr(key, "key", ""))
+        if name in ("k", "v", "c", "kr"):
+            return x
+        if name == "length":
+            axis = x.ndim - 1
+        elif name in ("wkv", "ssm"):
+            axis = x.ndim - 4
+        elif name in ("shift", "cm_shift"):
+            axis = x.ndim - 2
+        elif name == "conv":
+            axis = x.ndim - 3
+        else:
+            raise ValueError(f"unknown cache leaf {name!r}")
+        return x.at[(slice(None),) * axis + (i,)].set(0)
+
+    return jax.tree_util.tree_map_with_path(leaf, caches)
 
 
 class Engine:
-    """Single-model serving engine with slot-based continuous batching."""
+    """Slot-based continuous batching over the shared decode path.
 
-    def __init__(self, cfg, params, scfg: ServeConfig, recipe=None):
+    ``recipe`` shards the GSPMD path (prefill always; decode too unless an
+    explicit TP step is requested).  ``mesh`` + ``microbatches`` switch
+    decode to the explicit tensor-parallel step with staggered non-blocking
+    collectives (:func:`repro.serve.tp_decode.make_tp_decode_step`).
+    """
+
+    def __init__(self, cfg, params, scfg: ServeConfig, recipe=None, *,
+                 mesh=None, microbatches: int = 0,
+                 featurizer: Callable | None = None):
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
@@ -51,18 +136,76 @@ class Engine:
             positions=jnp.zeros((B,), jnp.int32),
         )
         self.slots = [_Slot() for _ in range(B)]
-        self.queue: list[tuple[int, list[int], int]] = []  # (req_id, prompt, max_new)
+        self.queue: list[tuple[int, list[int], Any, int]] = []
         self.finished: dict[int, list[int]] = {}
+        self.ledger = KVLedger(slots=B, max_len=scfg.max_len,
+                               bytes_per_pos=_kv_bytes_per_pos(cfg))
         self._key = jax.random.PRNGKey(scfg.seed)
-        self._step = jax.jit(self._step_impl)
+        self._featurize = featurizer or (lambda ids: _np_sinusoidal(ids, cfg.d_model))
+        self._embeds_in = cfg.input_kind == "embeds"
+        self._chunk_prefill = cfg.family in _CHUNK_FAMILIES
+
+        def gspmd_step(params, state, batch, counts, *, prefill=False):
+            # Decode runs under pinned rounding: activation-dtype boundaries
+            # materialize where the source says, so the scan-fused oracle jit
+            # and the unrolled TP shard_map emit the same number stream (see
+            # models/numerics.py).  Prefill stays unpinned — both engine
+            # modes share this exact prefill program, bitwise by identity.
+            ctx = nullcontext() if prefill else pinned_rounding()
+            with use_recipe(self.recipe), ctx:
+                return lm.decode_step(params, state, batch, cfg,
+                                      new_counts=counts, prefill=prefill)
+
+        self._prefill_fn = jax.jit(lambda p, s, b, c: gspmd_step(p, s, b, c, prefill=True))
+        if mesh is not None and microbatches:
+            from repro.serve.tp_decode import make_tp_decode_step
+
+            tp = make_tp_decode_step(cfg, mesh, slots=B, microbatches=microbatches)
+            # NOTE: params/state are deliberately NOT committed to the TP
+            # layout here — the GSPMD prefill jit would then compile
+            # distributed math whose FP reduction order diverges from the
+            # single-host oracle's; uncommitted inputs keep prefill bitwise
+            # the oracle and let the shard_map reshard at the decode boundary
+            self._decode_fn = jax.jit(lambda p, s, b, c: tp(p, s, b, c > 0))
+        else:
+            self._decode_fn = jax.jit(gspmd_step)
 
     # ------------------------------------------------------------ public ----
-    def submit(self, request_id: int, prompt: list[int], max_new_tokens: int) -> None:
-        self.queue.append((request_id, list(prompt), max_new_tokens))
+    def submit(self, request_id: int, prompt: list[int] | None = None,
+               max_new_tokens: int = 16, prompt_embeds=None) -> None:
+        """Queue a request.  ``prompt`` is a token-id list; embeds-input
+        models may instead (or additionally) pass ``prompt_embeds``
+        (P, d_model) — token ids are featurized when only ids are given."""
+        if prompt is None and prompt_embeds is None:
+            raise ValueError("submit needs a prompt and/or prompt_embeds")
+        prompt = list(prompt) if prompt is not None else []
+        if prompt_embeds is not None:
+            prompt_embeds = np.asarray(prompt_embeds, np.float32)
+            if prompt_embeds.ndim != 2 or prompt_embeds.shape[1] != self.cfg.d_model:
+                raise ValueError(f"prompt_embeds must be (P, {self.cfg.d_model})")
+        elif self._embeds_in:
+            prompt_embeds = self._featurize(prompt)
+        plen = len(prompt_embeds) if prompt_embeds is not None else len(prompt)
+        if plen + max_new_tokens > self.scfg.max_len:
+            raise ValueError(
+                f"request {request_id}: prompt {plen} + {max_new_tokens} new "
+                f"exceeds max_len {self.scfg.max_len}"
+            )
+        self.queue.append((request_id, prompt, prompt_embeds, max_new_tokens))
+
+    @property
+    def in_flight(self) -> dict[int, list[int]]:
+        """Partial outputs of requests still resident in slots — what a
+        ``run(max_steps)`` that hit its step budget leaves behind."""
+        return {s.request_id: list(s.tokens) for s in self.slots
+                if s.request_id is not None}
 
     def run(self, max_steps: int = 10_000) -> dict[int, list[int]]:
+        """Drive admission + decode until the queue drains or ``max_steps``
+        decode steps have run.  Returns the finished map; anything still
+        resident is reported via :attr:`in_flight`."""
         steps = 0
-        while (self.queue or any(s.request_id is not None for s in self.slots)) and steps < max_steps:
+        while (self.queue or self.in_flight) and steps < max_steps:
             self._fill_slots()
             self._decode_once()
             steps += 1
@@ -70,52 +213,103 @@ class Engine:
 
     # ---------------------------------------------------------- internals ----
     def _fill_slots(self) -> None:
+        newly: list[tuple[int, list[int], Any]] = []
         for i, slot in enumerate(self.slots):
             if slot.request_id is None and self.queue:
-                req_id, prompt, max_new = self.queue.pop(0)
-                slot.request_id = req_id
+                rid, prompt, embeds, max_new = self.queue.pop(0)
+                plen = len(embeds) if embeds is not None else len(prompt)
+                self.ledger.admit(i, plen, max_new)
+                slot.request_id = rid
                 slot.tokens = list(prompt)
                 slot.remaining = max_new
-                self._prefill_slot(i, prompt)
+                slot.next_embed = embeds[-1] if embeds is not None else None
+                self.state = lm.DecodeState(
+                    caches=_reset_slot_rows(self.state.caches, i),
+                    positions=self.state.positions.at[i].set(0),
+                )
+                newly.append((i, prompt, embeds))
+        if newly:
+            self._prefill(newly)
 
-    def _prefill_slot(self, i: int, prompt: list[int]) -> None:
-        """Sequential prefill into slot i (token-by-token; batched prefill is
-        the multi-pod ``prefill`` cell — here simplicity wins)."""
-        pos0 = 0
-        caches = self.state.caches
-        for t in prompt[:-1]:
-            batch = self._token_batch(i, t)
-            positions = self.state.positions.at[i].set(pos0)
-            logits, new_state = self._step(self.params, lm.DecodeState(caches, positions), batch)
-            caches = new_state.caches
-            pos0 += 1
-        self.state = lm.DecodeState(caches, self.state.positions.at[i].set(pos0))
+    # ------------------------------------------------------------ prefill ----
+    def _prefill(self, newly) -> None:
+        """Admission-time batched prefill of all newly filled slots.
 
-    def _token_batch(self, slot: int, token: int):
+        Every prefill step carries per-slot ``new_counts`` so *only* the
+        target slots write their cache rows — resident requests' K/V is
+        untouched (the cross-slot clobbering fix: the old path wrote every
+        slot's row at the prefill position).  Chunk-capable families run the
+        whole prompt as one ``prefill=True`` chunk (the sp_ring batched
+        prefill path); recurrent/moe families step token-by-token under the
+        same masking."""
         B = self.scfg.batch_slots
-        if self.cfg.input_kind == "embeds":
-            emb = np.zeros((B, 1, self.cfg.d_model), np.float32)
-            return {"embeds": jnp.asarray(emb)}
-        toks = np.zeros((B, 1), np.int32)
-        toks[slot, 0] = token
-        return {"tokens": jnp.asarray(toks)}
+        feeds = []  # (slot, ids[:-1] or embeds[:-1])
+        for i, prompt, embeds in newly:
+            feed = embeds[:-1] if embeds is not None else prompt[:-1]
+            if len(feed):
+                feeds.append((i, feed))
+        if not feeds:
+            return
+        S = max(len(f) for _, f in feeds)
+        if self._chunk_prefill:
+            S = min(self.scfg.max_len, 1 << (S - 1).bit_length())  # bucket: fewer recompiles
+            counts = np.zeros((B,), np.int32)
+            if self._embeds_in:
+                buf = np.zeros((B, S, self.cfg.d_model), np.float32)
+            else:
+                buf = np.zeros((B, S), np.int32)
+            for i, feed in feeds:
+                buf[i, : len(feed)] = feed
+                counts[i] = len(feed)
+            batch = ({"embeds": jnp.asarray(buf)} if self._embeds_in
+                     else {"tokens": jnp.asarray(buf)})
+            _, self.state = self._prefill_fn(self.params, self.state, batch,
+                                             jnp.asarray(counts))
+            for i, feed in feeds:
+                self.ledger.advance(i, len(feed))
+            return
+        for t in range(S):
+            counts = np.zeros((B,), np.int32)
+            if self._embeds_in:
+                buf = np.zeros((B, 1, self.cfg.d_model), np.float32)
+            else:
+                buf = np.zeros((B, 1), np.int32)
+            for i, feed in feeds:
+                if t < len(feed):
+                    buf[i, 0] = feed[t]
+                    counts[i] = 1
+                    self.ledger.advance(i, 1)
+            batch = ({"embeds": jnp.asarray(buf)} if self._embeds_in
+                     else {"tokens": jnp.asarray(buf)})
+            _, self.state = self._prefill_fn(self.params, self.state, batch,
+                                             jnp.asarray(counts))
 
+    # ------------------------------------------------------------- decode ----
     def _decode_once(self) -> None:
         B = self.scfg.batch_slots
-        toks = np.zeros((B, 1), np.int32)
+        counts = np.zeros((B,), np.int32)
+        if self._embeds_in:
+            buf = np.zeros((B, 1, self.cfg.d_model), np.float32)
+        else:
+            buf = np.zeros((B, 1), np.int32)
         for i, slot in enumerate(self.slots):
-            if slot.request_id is not None and slot.tokens:
-                toks[i, 0] = slot.tokens[-1]
-        batch = (
-            {"tokens": jnp.asarray(toks)}
-            if self.cfg.input_kind != "embeds"
-            else {"embeds": jnp.zeros((B, 1, self.cfg.d_model), jnp.float32)}
-        )
-        logits, self.state = self._step(self.params, self.state, batch)
+            if slot.request_id is None:
+                continue
+            counts[i] = 1
+            if self._embeds_in:
+                buf[i, 0] = (slot.next_embed if slot.next_embed is not None
+                             else self._featurize([slot.tokens[-1]])[0])
+            else:
+                buf[i, 0] = slot.tokens[-1]
+        batch = ({"embeds": jnp.asarray(buf)} if self._embeds_in
+                 else {"tokens": jnp.asarray(buf)})
+        logits, self.state = self._decode_fn(self.params, self.state, batch,
+                                             jnp.asarray(counts))
         logits = np.asarray(logits[:, -1, : self.cfg.vocab])  # strip padded vocab
         for i, slot in enumerate(self.slots):
             if slot.request_id is None:
                 continue
+            self.ledger.advance(i, 1)
             if self.scfg.temperature > 0:
                 self._key, sub = jax.random.split(self._key)
                 probs = jax.nn.softmax(jnp.asarray(logits[i]) / self.scfg.temperature)
@@ -123,11 +317,10 @@ class Engine:
             else:
                 nxt = int(np.argmax(logits[i]))
             slot.tokens.append(nxt)
+            if self._embeds_in:
+                slot.next_embed = self._featurize([nxt])[0]
             slot.remaining -= 1
             if nxt == self.scfg.eos_token or slot.remaining <= 0:
                 self.finished[slot.request_id] = slot.tokens
+                self.ledger.release(i)
                 self.slots[i] = _Slot()
-
-    def _step_impl(self, params, state, batch):
-        with use_recipe(self.recipe):
-            return lm.decode_step(params, state, batch, self.cfg)

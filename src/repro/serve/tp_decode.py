@@ -1,0 +1,294 @@
+"""Explicit tensor-parallel decode on the comm layer: shard_map + comm plans.
+
+The GSPMD decode path (``models/lm.decode_step`` under a recipe) lets XLA
+place every collective.  This module is the serving engine's *distributed
+decode step* built the other way around — the way the rest of the comm layer
+works: the program says exactly which collective moves, when it is issued,
+and which compute hides it, using the shard-level non-blocking twins
+(:func:`repro.core.p2p.shard_all_reduce_start` /
+``shard_all_gather_start``) on the shared :class:`repro.core.request.Pending`
+request path, scheduled by a declared :func:`repro.core.plan.stagger` comm
+plan.
+
+Per decode step and layer, the batch is split into ``microbatches``
+independent row groups.  Each microbatch's attention (and FFN) produces a
+*partial* output on its rank's head (or ffn) shard and issues its
+tensor-parallel ``Iallreduce``; because the microbatches are mutually
+independent, microbatch ``i``'s reduction completes behind microbatch
+``i+1``'s compute — the continuous-batching analogue of the SUMMA ring's
+issue-before/wait-after window, and the schedule the ``--serve`` dry run
+proves serializes nothing.  With ``microbatches=1`` the same program has no
+sibling compute and every reduction lands on the critical path — the
+negative control.
+
+Scope: the attention families with plain GQA blocks (``dense``/``audio``);
+heads, KV groups, FFN hidden and vocab must divide the ``model`` axis, batch
+slots must divide ``data`` x ``microbatches``.  The engine falls back to the
+single-host path for everything else.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compat import shard_map
+from repro.core.p2p import shard_all_gather_start, shard_all_reduce_start
+from repro.core.plan import intent_of, stagger
+from repro.models import lm
+from repro.models.attention import KVCache, apply_rope, attention_decode, rope_angles
+from repro.models.blocks import rmsnorm
+from repro.models.numerics import pin as _pin, pinned_rounding
+
+__all__ = ["make_tp_decode_step", "tp_decode_specs", "DECODE_TP_PLAN_INTENT"]
+
+# declared overlap intent of the decode schedule, consumed by the --serve
+# dry run's plan/HLO agreement gate
+DECODE_TP_PLAN_INTENT = intent_of("stagger")
+
+
+def _check(cfg, mesh, slots: int, microbatches: int) -> None:
+    if cfg.family not in ("dense", "audio"):
+        raise ValueError(f"tp decode supports dense/audio families, not {cfg.family!r}")
+    if cfg.qkv_bias or cfg.n_experts:
+        raise ValueError("tp decode: qkv_bias / MoE blocks not supported")
+    for name in ("data", "model"):
+        if name not in mesh.shape:
+            raise ValueError(f"tp decode needs a (data, model) mesh, missing {name!r}")
+    msize = mesh.shape["model"]
+    for label, n in (("n_heads", cfg.n_heads), ("n_kv", cfg.n_kv),
+                     ("d_ff", cfg.d_ff), ("vocab_padded", cfg.vocab_padded)):
+        if n % msize:
+            raise ValueError(f"tp decode: {label}={n} must divide model axis {msize}")
+    dsize = mesh.shape["data"]
+    if slots % dsize or (slots // dsize) % microbatches:
+        raise ValueError(
+            f"tp decode: {slots} slots must split over data={dsize} x "
+            f"microbatches={microbatches}"
+        )
+
+
+def tp_decode_specs(cfg, *, stacked: bool = True):
+    """PartitionSpec trees (params, cache k/v, cache length) for the explicit
+    TP decode layout: heads/KV-groups/FFN-hidden/vocab over ``model``, batch
+    slots over ``data``, everything else replicated."""
+    from jax.sharding import PartitionSpec as P
+
+    lead = (None,) if stacked else ()
+    attn = {
+        "wq": P(*lead, None, "model", None),
+        "wk": P(*lead, None, "model", None),
+        "wv": P(*lead, None, "model", None),
+        "wo": P(*lead, "model", None, None),
+    }
+    if cfg.ffn_kind == "gelu":
+        ffn = {"w_in": P(*lead, None, "model"), "w_out": P(*lead, "model", None),
+               "b_in": P(*lead, "model"), "b_out": P(*lead, None)}
+    else:
+        ffn = {"w_gate": P(*lead, None, "model"), "w_up": P(*lead, None, "model"),
+               "w_down": P(*lead, "model", None)}
+    params = {
+        "final_norm": P(None),
+        "blocks": {"ln1": P(*lead, None), "ln2": P(*lead, None),
+                   "attn": attn, "ffn": ffn},
+    }
+    if cfg.input_kind in ("tokens", "tokens+image"):
+        params["embed"] = P("model", None)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = P(None, "model")
+    kv = P(*lead, "data", "model", None, None)
+    return params, kv, P(*lead, "data")
+
+
+def make_tp_decode_step(cfg, mesh, *, slots: int, microbatches: int = 2,
+                        double_buffer: bool = True):
+    """Build ``step(params, state, batch, active) -> (logits, new_state)``.
+
+    ``state`` is the stacked :class:`repro.models.lm.DecodeState`;
+    ``batch`` holds ``tokens`` (B, S) or ``embeds`` (B, S, m); ``active``
+    (B,) bool marks slots carrying a real token this step — inactive rows'
+    cache writes are masked out and their positions do not advance (the
+    same per-row semantics as the fixed single-host ``decode_step``).
+    """
+    _check(cfg, mesh, slots, microbatches)
+    # This body traces under pinned rounding (models/numerics.py): every
+    # activation-dtype boundary carries a barrier so XLA cannot fold the
+    # round into downstream f32 internals.  The oracle decode jit pins the
+    # same boundaries, which is what makes the distributed engine's greedy
+    # tokens match the single-host oracle's token-for-token.
+    msize = mesh.shape["model"]
+    dsize = mesh.shape["data"]
+    mb = microbatches
+    L = cfg.n_layers
+    tokens_in = cfg.input_kind != "embeds"
+    act_dt = cfg.act_dtype
+
+    from jax.sharding import PartitionSpec as P
+
+    p_specs, kv_spec, len_spec = tp_decode_specs(cfg)
+    in_batch = P("data", None) if tokens_in else P("data", None, None)
+
+    def body(params, k_all, v_all, length_all, positions, inputs, active):
+        midx = jax.lax.axis_index("model")
+        counts = active.astype(jnp.int32)
+        Bl = positions.shape[0]
+        bm = Bl // mb
+        S = inputs.shape[1]
+        pos2d = positions[:, None] + jnp.arange(S, dtype=positions.dtype)[None, :]
+
+        # ---- embed: local vocab-shard gather + masked Iallreduce ----
+        if tokens_in:
+            vl = cfg.vocab_padded // msize
+            table = params["embed"].astype(act_dt)
+            loc = inputs - midx * vl
+            ok = (loc >= 0) & (loc < vl)
+            e = jnp.take(table, jnp.clip(loc, 0, vl - 1), axis=0)
+            e = jnp.where(ok[..., None], e, jnp.zeros((), act_dt))
+            # each token's row lives on exactly one rank: the psum is a pure
+            # routing gather (one nonzero addend) — bitwise the oracle lookup
+            x = _pin(shard_all_reduce_start(e, "model").wait())
+        else:
+            x = _pin(inputs.astype(act_dt)
+                     + lm._sinusoidal(pos2d, cfg.d_model).astype(act_dt))
+
+        rows = [slice(s * bm, (s + 1) * bm) for s in range(mb)]
+        xs = [x[r] for r in rows]
+        a_mb = [active[r] for r in rows]
+        c_mb = [counts[r] for r in rows]
+        p_mb = [pos2d[r] for r in rows]
+
+        def masked_update(cache, new, length, act_rows):
+            size = cache.shape[2]
+
+            def row(c, n, p):
+                return jax.lax.dynamic_update_slice(c, n, (0, p, 0))
+
+            upd = jax.vmap(row)(cache, new.astype(cache.dtype), length % size)
+            return jnp.where(act_rows[:, None, None, None], upd, cache)
+
+        new_k_layers, new_v_layers = [], []
+        blocks = params["blocks"]
+        for l in range(L):
+            ln1 = blocks["ln1"][l]
+            ln2 = blocks["ln2"][l]
+            wq = blocks["attn"]["wq"][l]
+            wk = blocks["attn"]["wk"][l]
+            wv = blocks["attn"]["wv"][l]
+            wo = blocks["attn"]["wo"][l]
+            new_k_l: list = [None] * mb
+            new_v_l: list = [None] * mb
+
+            def attn_compute(_c, _s, s, l=l, ln1=ln1, wq=wq, wk=wk, wv=wv, wo=wo,
+                             new_k_l=new_k_l, new_v_l=new_v_l):
+                xi = xs[s]
+                xn = _pin(rmsnorm(ln1, xi))
+                q = _pin(jnp.einsum("bsm,mhd->bhsd", xn, wq.astype(xi.dtype)))
+                k = _pin(jnp.einsum("bsm,mgd->bgsd", xn, wk.astype(xi.dtype)))
+                v = _pin(jnp.einsum("bsm,mgd->bgsd", xn, wv.astype(xi.dtype)))
+                cos, sin = rope_angles(p_mb[s], cfg.head_dim, cfg.rope_theta)
+                q = _pin(apply_rope(q, cos, sin))
+                k = _pin(apply_rope(k, cos, sin))
+                length = length_all[l][rows[s]]
+                nk = masked_update(k_all[l][rows[s]], k, length, a_mb[s])
+                nv = masked_update(v_all[l][rows[s]], v, length, a_mb[s])
+                new_k_l[s] = nk
+                new_v_l[s] = nv
+                o = _pin(attention_decode(q, nk, nv, length + c_mb[s],
+                                          q_positions=p_mb[s]))
+                # local head shard's partial projection — the transfer stage
+                # issues its Iallreduce; the next microbatch's math hides it.
+                # Partials stay f32 through the reduction and are rounded to
+                # the activation dtype once, post-psum: splitting the dot
+                # across ranks then only perturbs f32-level accumulation
+                # order, so the reduced sum rounds to the same low-precision
+                # value as the oracle's single full-contraction dot.
+                return jnp.einsum("bhsd,hdm->bsm", o, wo.astype(xi.dtype),
+                                  preferred_element_type=jnp.float32)
+
+            attn_done = stagger(
+                mb,
+                transfer=lambda part, s: shard_all_reduce_start(part, "model"),
+                compute=attn_compute,
+                epilogue=lambda done, _s: [_pin(d.astype(act_dt)) for d in done],
+            ).run(None, None, double_buffer=double_buffer)
+            xs = [_pin(xs[s] + attn_done[s]) for s in range(mb)]
+
+            ffn = blocks["ffn"]
+            if cfg.ffn_kind == "gelu":
+                w_in = ffn["w_in"][l]
+                w_out = ffn["w_out"][l]
+                b_in = ffn["b_in"][l]
+                b_out = ffn["b_out"][l]
+
+                def ffn_compute(_c, _s, s, ln2=ln2, w_in=w_in, w_out=w_out, b_in=b_in):
+                    xn = _pin(rmsnorm(ln2, xs[s]))
+                    h = _pin(jnp.einsum("bsm,mf->bsf", xn, w_in.astype(xn.dtype)))
+                    h = _pin(jax.nn.gelu(h + b_in.astype(xn.dtype)))
+                    return jnp.einsum("bsf,fm->bsm", h, w_out.astype(xn.dtype),
+                                      preferred_element_type=jnp.float32)
+
+                def ffn_epilogue(done, _s, b_out=b_out):
+                    # round the f32-reduced sum once, then add the replicated
+                    # output bias in the activation dtype — the oracle's order
+                    return [_pin(_pin(d.astype(act_dt)) + b_out.astype(act_dt))
+                            for d in done]
+            else:
+                w_gate = ffn["w_gate"][l]
+                w_up = ffn["w_up"][l]
+                w_down = ffn["w_down"][l]
+
+                def ffn_compute(_c, _s, s, ln2=ln2, w_gate=w_gate, w_up=w_up, w_down=w_down):
+                    xn = _pin(rmsnorm(ln2, xs[s]))
+                    g = _pin(jnp.einsum("bsm,mf->bsf", xn, w_gate.astype(xn.dtype)))
+                    u = _pin(jnp.einsum("bsm,mf->bsf", xn, w_up.astype(xn.dtype)))
+                    h = _pin(jax.nn.silu(g) * u)
+                    return jnp.einsum("bsf,fm->bsm", h, w_down.astype(xn.dtype),
+                                      preferred_element_type=jnp.float32)
+
+                def ffn_epilogue(done, _s):
+                    return [_pin(d.astype(act_dt)) for d in done]
+
+            ffn_done = stagger(
+                mb,
+                transfer=lambda part, s: shard_all_reduce_start(part, "model"),
+                compute=ffn_compute,
+                epilogue=ffn_epilogue,
+            ).run(None, None, double_buffer=double_buffer)
+            xs = [_pin(xs[s] + ffn_done[s]) for s in range(mb)]
+
+            new_k_layers.append(jnp.concatenate(new_k_l, axis=0))
+            new_v_layers.append(jnp.concatenate(new_v_l, axis=0))
+
+        x = jnp.concatenate(xs, axis=0)
+        xn = _pin(rmsnorm(params["final_norm"], x))
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        # vocab-sharded head: the contraction dim is replicated, so each
+        # rank's logit columns are full dots — pinned like lm_logits'
+        logits_loc = _pin(jnp.einsum("bsm,mv->bsv", xn, head.astype(xn.dtype)))
+        # terminal Iallgather of the local vocab shards (rank-ordered)
+        logits = shard_all_gather_start(logits_loc, "model", axis=2).wait()
+
+        new_k = jnp.stack(new_k_layers)
+        new_v = jnp.stack(new_v_layers)
+        new_len = length_all + counts[None, :]
+        return logits, new_k, new_v, new_len, positions + counts
+
+    out_specs = (P("data", None, None), kv_spec, kv_spec, len_spec, P("data"))
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(p_specs, kv_spec, kv_spec, len_spec, P("data"), in_batch, P("data")),
+        out_specs=out_specs,
+        check_rep=False,
+    )
+
+    def step(params, state, batch, active):
+        caches = state.caches
+        inputs = batch["tokens"] if tokens_in else batch["embeds"]
+        with pinned_rounding():
+            logits, nk, nv, nlen, npos = fn(
+                params, caches.k, caches.v, caches.length, state.positions,
+                inputs, active,
+            )
+        new_state = lm.DecodeState(caches=KVCache(nk, nv, nlen), positions=npos)
+        return logits, new_state
+
+    return step

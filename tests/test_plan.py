@@ -200,3 +200,45 @@ print('OK')
 """
     )
     assert "OK" in out
+
+
+def test_stagger_executor_round_robin_issue_wait_placement():
+    """The stagger plan round-robins independent steps: double-buffered
+    issues EVERY step's transfer before any wait (the whole wave in flight
+    at once); blocking completes each step before the next begins.  Results
+    are identical — the steps share no state."""
+    from repro.core import Pending
+    from repro.core.plan import intent_of, stagger
+
+    assert intent_of("stagger") == "overlapped"
+
+    trace: list = []
+
+    def transfer(v, s):
+        trace.append(("xfer", s))
+
+        class Traced(Pending):
+            def wait(self2):
+                trace.append(("wait", s))
+                return Pending.wait(self2)
+
+        return Traced(v * 10)
+
+    def compute(carry, state, s):
+        trace.append(("comp", s))
+        return s + 1
+
+    plan = stagger(3, transfer=transfer, compute=compute)
+    done_db = plan.run(None, None)
+    order_db = list(trace)
+    trace.clear()
+    done_bl = plan.run(None, None, double_buffer=False)
+    order_bl = list(trace)
+
+    assert [int(d) for d in done_db] == [10, 20, 30] == [int(d) for d in done_bl]
+    assert order_db == [("comp", 0), ("xfer", 0), ("comp", 1), ("xfer", 1),
+                        ("comp", 2), ("xfer", 2),
+                        ("wait", 0), ("wait", 1), ("wait", 2)]
+    assert order_bl == [("comp", 0), ("xfer", 0), ("wait", 0),
+                        ("comp", 1), ("xfer", 1), ("wait", 1),
+                        ("comp", 2), ("xfer", 2), ("wait", 2)]

@@ -201,3 +201,50 @@ print('OK')
 """
     )
     assert "OK" in out
+
+
+def test_gqa_attention_prefill_chunk_ring_matches_no_recipe(distributed):
+    """The serving prefill path: a whole-prompt chunk through the decode-mode
+    op (``cache=`` + ``prefill=True``) under an sp_ring recipe runs the ring
+    plan on the fresh Q/K/V while the cache fills — output and cache must
+    match the same chunk with no recipe, and the ragged pad slice must ride
+    behind the output projection (terminal), not reshard mid-graph."""
+    out = distributed(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from types import SimpleNamespace
+from repro.core.compat import make_mesh
+from repro.models import attention as attn
+from repro.models.sharding import make_recipe, use_recipe
+
+cfg = SimpleNamespace(n_heads=4, n_kv=2, head_dim=16, d_model=64, d_ff=128,
+                      vocab_padded=256, n_experts=0, family='dense')
+mesh = make_mesh((2, 4), ('data', 'model'))
+recipe = make_recipe(cfg, mesh, attn_mode='sp_ring')
+
+rng = np.random.default_rng(12)
+p = {
+    'wq': jnp.asarray(rng.standard_normal((64, 4, 16)) * 0.1, jnp.float32),
+    'wk': jnp.asarray(rng.standard_normal((64, 2, 16)) * 0.1, jnp.float32),
+    'wv': jnp.asarray(rng.standard_normal((64, 2, 16)) * 0.1, jnp.float32),
+    'wo': jnp.asarray(rng.standard_normal((4, 16, 64)) * 0.1, jnp.float32),
+}
+B, S, T = 2, 64, 128
+x = jnp.asarray(rng.standard_normal((B, S, 64)), jnp.float32)
+positions = jnp.tile(jnp.arange(S), (B, 1))  # prefill chunks start at 0
+
+def fresh_cache():
+    return attn.KVCache(k=jnp.zeros((B, 2, T, 16)), v=jnp.zeros((B, 2, T, 16)),
+                        length=jnp.zeros((B,), jnp.int32))
+
+kw = dict(n_heads=4, n_kv=2, head_dim=16, positions=positions, prefill=True)
+ref, ref_c = attn.gqa_attention(p, x, cache=fresh_cache(), **kw)
+with use_recipe(recipe):
+    ring, ring_c = attn.gqa_attention(p, x, cache=fresh_cache(), **kw)
+assert np.abs(np.asarray(ring) - np.asarray(ref)).max() < 1e-4
+assert np.array_equal(np.asarray(ref_c.length), np.asarray(ring_c.length))
+assert np.abs(np.asarray(ref_c.k) - np.asarray(ring_c.k)).max() < 1e-5
+print('OK')
+"""
+    )
+    assert "OK" in out

@@ -1,6 +1,14 @@
 """LM substrate benchmark: smoke-scale train and decode step times for every
 assigned architecture (CPU wall-clock; the full-scale numbers are the
-dry-run roofline terms in benchmarks/results/)."""
+dry-run roofline terms in benchmarks/results/).
+
+A second table times the attention hot-path kernels themselves — the
+carry-state flash step that sp_ring runs once per ring hop and the split-KV
+decode kernel the serving engine runs per token — jnp reference vs the
+Pallas kernel in interpret mode.  ``--attn-kernel-json PATH`` writes those
+rows as the nightly ``attn_kernel_bench.json`` artifact.  Interpret-mode
+wall-clock on CPU is a correctness-path number, not a perf claim; the
+compiled-Pallas column only exists on a real TPU."""
 import sys, os, time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -76,5 +84,61 @@ def run() -> list[str]:
     return out
 
 
+def attn_kernel_rows() -> list[dict]:
+    """Time one sp_ring ring-step compute and one decode-attention call in
+    both impls at representative smoke shapes (f32, CPU)."""
+    from functools import partial
+
+    from repro.kernels import ops
+
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(1), 3)
+    rows = []
+    impls = (("ref", "jnp"), ("interpret", "pallas_interpret"))
+
+    # one ring step: resident Q chunk vs the held KV block, carry threaded
+    B, Hq, G, Sl, D = 2, 8, 2, 64, 32
+    q = jax.random.normal(kq, (B, Hq, Sl, D), jnp.float32)
+    k = jax.random.normal(kk, (B, G, Sl, D), jnp.float32)
+    v = jax.random.normal(kv, (B, G, Sl, D), jnp.float32)
+    for impl, label in impls:
+        fn = jax.jit(partial(ops.flash_attention_carry, causal=True,
+                             q_offset=Sl, k_offset=0, impl=impl, bq=Sl, bk=Sl))
+        t = _time(lambda: fn(q, k, v))
+        rows.append({"kernel": "sp_ring_step", "impl": label,
+                     "shape": f"B{B}xH{Hq}xG{G}xS{Sl}xD{D}",
+                     "us_per_call": t * 1e6})
+
+    # one decode step: a single token per slot against the paged cache
+    T = 128
+    dq = jax.random.normal(kq, (B, Hq, 1, D), jnp.float32)
+    kc = jax.random.normal(kk, (B, G, T, D), jnp.float32)
+    vc = jax.random.normal(kv, (B, G, T, D), jnp.float32)
+    clen = jnp.full((B,), T, jnp.int32)
+    for impl, label in impls:
+        fn = jax.jit(partial(ops.flash_decode, impl=impl, bk=64))
+        t = _time(lambda: fn(dq, kc, vc, clen))
+        rows.append({"kernel": "decode", "impl": label,
+                     "shape": f"B{B}xH{Hq}xG{G}xT{T}xD{D}",
+                     "us_per_call": t * 1e6})
+    return rows
+
+
 if __name__ == "__main__":
-    print("\n".join(run()))
+    import argparse, json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--attn-kernel-json", default=None,
+                    help="write the attention-kernel rows to this JSON path")
+    ap.add_argument("--kernels-only", action="store_true",
+                    help="skip the per-arch table (fast nightly artifact run)")
+    args = ap.parse_args()
+
+    lines = [] if args.kernels_only else run()
+    kern = attn_kernel_rows()
+    lines += ["", "kernel,impl,shape,us_per_call"]
+    lines += [f"{r['kernel']},{r['impl']},{r['shape']},{r['us_per_call']:.0f}"
+              for r in kern]
+    print("\n".join(lines).lstrip("\n"))
+    if args.attn_kernel_json:
+        with open(args.attn_kernel_json, "w") as f:
+            json.dump({"rows": kern, "backend": jax.default_backend()}, f, indent=2)

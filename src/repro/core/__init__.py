@@ -94,6 +94,26 @@ decode schedule         ``stagger`` comm plan: persistent-request round-robin
 slot release/admit      extents-table update — the same bookkeeping a
                         ragged redistribution performs before reusing a tile
 ======================  =====================================================
+
+Attention kernel dispatch
+-------------------------
+The comm plans above schedule the *wire*; the per-step *compute* they
+overlap against is kernelized in :mod:`repro.kernels`.  Two Pallas hot
+paths plug into the plans' compute slots (full table in
+``repro.models.attention``):
+
+* ``flash_attention_carry`` — one ``sp_ring`` ring step as a single
+  carry-state flash kernel over the resident Q chunk vs the held KV block,
+  threading unnormalized ``(acc, m, l)`` across hops (input/output aliased,
+  so the chained result is bit-identical to the single-shot kernel at f32);
+* ``flash_decode`` — split-KV flash decoding over the serving engine's KV
+  cache: grid over cache blocks emitting per-block partials, LSE-combined
+  in an epilogue, masked by each slot's ``cache_len``/positions extents.
+
+Defaults resolve per backend (TPU -> compiled Pallas, CPU -> jnp
+reference); ``impl="interpret"`` runs the same kernels through the Pallas
+interpreter so the dry-run gates (``dryrun --sp-ring/--serve
+--attn-impl interpret``) prove overlap with the real kernels in the trace.
 """
 from .compat import make_mesh, shard_map
 from .dims import LayoutError, ceil_div, common_refinement, ragged_split

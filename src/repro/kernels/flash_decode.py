@@ -1,0 +1,140 @@
+"""Split-KV flash-decoding Pallas kernel.
+
+Decode reads the whole KV cache to score one (or a few) new tokens — the
+roofline term is the cache stream, and the query tile is tiny, so the
+parallelism has to come from the *key* axis: the grid splits the cache seq
+dim into KV blocks, each program emits the block's unnormalized partial
+``(o_j, m_j, l_j)`` online-softmax state, and a jnp log-sum-exp combine
+epilogue merges the partials:
+
+    m = max_j m_j ;  o = sum_j e^{m_j - m} o_j / sum_j e^{m_j - m} l_j
+
+(the flash-decoding merge — the same algebra the sp_ring ring carries
+across devices, here across grid programs over a resident cache).
+
+Masking matches :func:`repro.models.attention.attention_decode`: cache
+positions ``>= min(cache_len, T)`` are invalid (ring-buffer aware), and with
+per-slot ``q_positions`` a cache slot ``t`` is visible to query ``j`` iff
+``t <= q_positions[b, j]`` — the continuous-batching per-row mask.  Both
+masks use *runtime* per-batch scalars, streamed in as ordinary (tiny) VMEM
+inputs; the probabilities round to the cache dtype before the p@v
+contraction, mirroring the jnp path's pinned-rounding boundary.
+
+GQA is absorbed in the grid: one program per (batch, kv-head, kv-block),
+with the ``rep = Hq // G`` query heads of the group stacked into the row
+dim of a single (rep*S, d) tile — the kernel-side analogue of the
+BlockSpec ``h // group`` mapping of the seq kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_decode_pallas"]
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, pos_ref, oa_ref, om_ref, ol_ref,
+                   *, bk: int, T: int, rep: int, S: int, scale: float):
+    j = pl.program_id(2)
+    RS = rep * S
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (RS, d)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bk, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (RS, bk)
+    k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (RS, bk), 1)
+    # ring-buffer aware validity; padded tail positions (>= T) fall out too
+    valid = jnp.minimum(len_ref[0, 0], T)
+    mask = k_pos < valid
+    # per-row chunk causality: row r is (rep r // S, query r % S)
+    pos = jnp.broadcast_to(pos_ref[0][None, :], (rep, S)).reshape(RS)
+    mask = mask & (k_pos <= pos[:, None])
+    s = jnp.where(mask, s, NEG_INF)
+    m = s.max(axis=1)  # (RS,)
+    p = jnp.exp(s - m[:, None])
+    l = p.sum(axis=1)
+    # probabilities round to the cache dtype before the contraction, like the
+    # jnp decode path (there: normalized + pinned; here the normalizer lives
+    # in the combine epilogue, so the round is on the unnormalized tile)
+    o = jnp.dot(p.astype(v_ref.dtype), v_ref[0, 0],
+                preferred_element_type=jnp.float32)  # (RS, dv)
+    oa_ref[0, 0, 0] = o
+    om_ref[0, 0, 0] = m
+    ol_ref[0, 0, 0] = l
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret", "scale"))
+def flash_decode_pallas(
+    q,  # (B, Hq, S, D) new queries
+    k_cache,  # (B, G, T, D)
+    v_cache,  # (B, G, T, Dv)
+    cache_len,  # (B,) int32
+    *,
+    q_positions=None,  # (B, S) int32 absolute positions, or None
+    scale: float | None = None,
+    bk: int = 512,
+    interpret: bool = False,
+):
+    """Split-KV decode attention; returns (B, Hq, S, Dv) in q.dtype."""
+    B, Hq, S, D = q.shape
+    _, G, T, _ = k_cache.shape
+    Dv = v_cache.shape[-1]
+    if Hq % G:
+        raise ValueError(f"Hq={Hq} not a multiple of G={G}")
+    rep = Hq // G
+    RS = rep * S
+    scale = float(scale if scale is not None else D ** -0.5)
+    bk_ = min(bk, T)
+    T_p = -(-T // bk_) * bk_
+    if T_p != T:
+        pad = [(0, 0), (0, 0), (0, T_p - T), (0, 0)]
+        k_cache = jnp.pad(k_cache, pad)
+        v_cache = jnp.pad(v_cache, pad)
+    nb = T_p // bk_
+    # the query-head groups stack into the row dim of one (rep*S, d) tile
+    qg = q.reshape(B, G, RS, D)
+    lens = cache_len.astype(jnp.int32).reshape(B, 1)
+    if q_positions is None:
+        # no intra-chunk mask: any position >= T-1 makes `t <= pos` vacuous
+        pos = jnp.full((B, S), T, jnp.int32)
+    else:
+        pos = q_positions.astype(jnp.int32).reshape(B, S)
+
+    kernel = functools.partial(
+        _decode_kernel, bk=bk_, T=T, rep=rep, S=S, scale=scale
+    )
+    oa, om, ol = pl.pallas_call(
+        kernel,
+        grid=(B, G, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, RS, D), lambda b, g, j: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, bk_, D), lambda b, g, j: (b, g, j, 0)),
+            pl.BlockSpec((1, 1, bk_, Dv), lambda b, g, j: (b, g, j, 0)),
+            pl.BlockSpec((1, 1), lambda b, g, j: (b, 0)),
+            pl.BlockSpec((1, S), lambda b, g, j: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, RS, Dv), lambda b, g, j: (b, g, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, RS), lambda b, g, j: (b, g, j, 0)),
+            pl.BlockSpec((1, 1, 1, RS), lambda b, g, j: (b, g, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, G, nb, RS, Dv), jnp.float32),
+            jax.ShapeDtypeStruct((B, G, nb, RS), jnp.float32),
+            jax.ShapeDtypeStruct((B, G, nb, RS), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k_cache, v_cache, lens, pos)
+
+    # log-sum-exp combine over the KV blocks (the flash-decoding merge)
+    m_tot = om.max(axis=2)  # (B, G, RS)
+    w = jnp.exp(om - m_tot[:, :, None])  # (B, G, nb, RS)
+    l_tot = (w * ol).sum(axis=2)
+    o = (w[..., None] * oa).sum(axis=2)  # (B, G, RS, Dv)
+    l_tot = jnp.where(l_tot == 0.0, 1.0, l_tot)
+    o = o / l_tot[..., None]
+    return o.reshape(B, Hq, S, Dv).astype(q.dtype)

@@ -15,10 +15,19 @@ import jax
 
 from . import ref as _ref
 from .gemm import gemm_pallas, gemm_panel_pallas
-from .flash_attention import flash_attention_pallas
+from .flash_attention import flash_attention_pallas, flash_attention_carry_pallas
+from .flash_decode import flash_decode_pallas
 from .relayout import transpose_tiled_pallas
 
-__all__ = ["default_impl", "gemm", "gemm_panel", "flash_attention", "transpose_tiled"]
+__all__ = [
+    "default_impl",
+    "gemm",
+    "gemm_panel",
+    "flash_attention",
+    "flash_attention_carry",
+    "flash_decode",
+    "transpose_tiled",
+]
 
 
 def default_impl() -> str:
@@ -53,6 +62,41 @@ def flash_attention(q, k, v, *, causal: bool = True, impl: str | None = None, mi
         )
     # the Pallas kernel is always mixed-precision internally (f32 VMEM acc)
     return flash_attention_pallas(q, k, v, causal=causal, interpret=(impl == "interpret"), **kw)
+
+
+def flash_attention_carry(q, k, v, carry=None, *, q_offset=0, k_offset=0,
+                          valid_len=None, causal: bool = True,
+                          impl: str | None = None, **kw):
+    """One carry-state flash step (a sp_ring ring step): attention of the
+    resident Q chunk against the held KV block, threading unnormalized
+    ``(acc, m, l)``.  Offsets may be traced (``axis_index`` inside
+    ``shard_map``) — the Pallas path routes them through scalar prefetch."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.flash_carry_ref(
+            q, k, v, carry, q_offset=q_offset, k_offset=k_offset,
+            valid_len=valid_len, causal=causal, scale=kw.get("scale"),
+        )
+    return flash_attention_carry_pallas(
+        q, k, v, carry, q_offset=q_offset, k_offset=k_offset,
+        valid_len=valid_len, causal=causal,
+        interpret=(impl == "interpret"), **kw,
+    )
+
+
+def flash_decode(q, k_cache, v_cache, cache_len, *, q_positions=None,
+                 impl: str | None = None, **kw):
+    """Split-KV decode attention over the cache (LSE-combined partials)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.decode_attention_ref(
+            q, k_cache, v_cache, cache_len, q_positions=q_positions,
+            scale=kw.get("scale"),
+        )
+    return flash_decode_pallas(
+        q, k_cache, v_cache, cache_len, q_positions=q_positions,
+        interpret=(impl == "interpret"), **kw,
+    )
 
 
 def transpose_tiled(x, *, impl: str | None = None, **kw):

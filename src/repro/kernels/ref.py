@@ -9,7 +9,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["gemm_ref", "gemm_panel_ref", "attention_ref", "transpose_ref", "blockwise_attention_ref"]
+__all__ = [
+    "gemm_ref",
+    "gemm_panel_ref",
+    "attention_ref",
+    "transpose_ref",
+    "blockwise_attention_ref",
+    "flash_carry_ref",
+    "decode_attention_ref",
+]
 
 
 def gemm_ref(a, b, acc=None, *, majors: str = "I/I/K", out_dtype=None):
@@ -122,6 +130,78 @@ def blockwise_attention_ref(q, k, v, *, causal: bool = True, scale: float | None
     (o, m, l), _ = jax.lax.scan(body, (o0, m0, l0), jnp.arange(nb))
     l = jnp.where(l == 0.0, 1.0, l)
     return (o / l[..., None]).astype(q.dtype)
+
+
+def flash_carry_ref(q, k, v, carry=None, *, q_offset=0, k_offset=0,
+                    valid_len: int | None = None, causal: bool = True,
+                    scale: float | None = None):
+    """Reference for one carry-state flash step
+    (:func:`repro.kernels.flash_attention.flash_attention_carry_pallas`):
+    online-softmax merge of the whole held KV block against the resident Q
+    chunk, threading unnormalized ``(acc, m, l)``.  Same math as the jnp
+    ring-step merge in ``models.attention._ring_attention_local``, in the
+    kernel's (B, Hq, S, ·) head layout."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    Dv = v.shape[-1]
+    group = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    if carry is None:
+        acc = jnp.zeros((B, Hq, Sq, Dv), jnp.float32)
+        m = jnp.full((B, Hq, Sq), -1e30, jnp.float32)
+        l = jnp.zeros((B, Hq, Sq), jnp.float32)
+    else:
+        acc, m, l = carry
+    kb = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vb = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kb,
+                   preferred_element_type=jnp.float32) * scale
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = k_offset + jnp.arange(Skv)
+    mask = None
+    if causal:
+        mask = q_pos[:, None] >= k_pos[None, :]
+    if valid_len is not None:
+        pad = k_pos[None, :] < valid_len
+        mask = pad if mask is None else mask & pad
+    if mask is not None:
+        s = jnp.where(mask[None, None], s, -1e30)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    alpha = jnp.exp(m - m_new)
+    l_new = l * alpha + p.sum(axis=-1)
+    acc_new = acc * alpha[..., None] + jnp.einsum(
+        "bhqk,bhkd->bhqd", p, vb, preferred_element_type=jnp.float32)
+    return acc_new, m_new, l_new
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len, *, q_positions=None,
+                         scale: float | None = None):
+    """Reference for :func:`repro.kernels.flash_decode.flash_decode_pallas`:
+    dense decode attention over the cache with ring-buffer-aware length
+    masking and the per-row chunk-causality mask.  (The model-facing jnp
+    path in ``models.attention.attention_decode`` additionally rounds the
+    normalized probabilities to the cache dtype under a pinned barrier; this
+    oracle keeps everything f32.)"""
+    B, Hq, S, D = q.shape
+    _, G, T, _ = k_cache.shape
+    rep = Hq // G
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, G, rep, S, D)
+    s = jnp.einsum("bgrqd,bgsd->bgrqs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    valid = jnp.minimum(cache_len.reshape(B, 1, 1, 1, 1), T)
+    mask = jnp.arange(T)[None, None, None, None, :] < valid
+    if q_positions is not None:
+        mask = mask & (
+            jnp.arange(T)[None, None, None, None, :]
+            <= q_positions.reshape(B, 1, 1, S, 1)
+        )
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrqs,bgsd->bgrqd", p, v_cache.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Hq, S, v_cache.shape[-1]).astype(q.dtype)
 
 
 def transpose_ref(x):

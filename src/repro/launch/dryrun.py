@@ -280,7 +280,8 @@ def ragged_summa_dryrun(*, ni: int = 35, nj: int = 35, nk: int = 35,
 
 def sp_ring_dryrun(*, batch: int = 2, seq: int = 256, d_model: int = 64,
                    n_heads: int = 4, n_kv: int = 2, head_dim: int = 16,
-                   grid: tuple[int, int] = (2, 4), verbose: bool = True) -> dict:
+                   grid: tuple[int, int] = (2, 4), attn_impl: str | None = None,
+                   verbose: bool = True) -> dict:
     """Dry-run the sequence-parallel ring-attention trace (both variants):
     lower+compile a GQA attention op — QKV projections, the double-buffered
     KV ring, output projection — under an ``sp_ring`` recipe on a
@@ -303,6 +304,13 @@ def sp_ring_dryrun(*, batch: int = 2, seq: int = 256, d_model: int = 64,
     plan agreement stays scoped to the plan's own collective kind
     (``collective-permute``); the boundary count is reported separately as
     a regression tripwire.
+
+    ``attn_impl="interpret"`` traces the ring steps through the carry-state
+    Pallas flash kernel in interpret mode (plain HLO on CPU), so the gate
+    proves the same 0-serialized verdict *with the kernel in the traced
+    program* — each step's kernel consumes the held KV block and is a
+    sibling of the in-flight rotation, exactly like the jnp merge it
+    replaces.  ``None`` keeps the jnp ring-step body.
     """
     from types import SimpleNamespace
 
@@ -333,7 +341,7 @@ def sp_ring_dryrun(*, batch: int = 2, seq: int = 256, d_model: int = 64,
 
     out: dict = {"batch": batch, "seq": seq, "d_model": d_model,
                  "n_heads": n_heads, "n_kv": n_kv, "grid": list(grid),
-                 "ragged_seq": bool(seq % R),
+                 "ragged_seq": bool(seq % R), "attn_impl": attn_impl,
                  "valid_fraction": None if valid_fractions is None
                  else valid_fractions["collective-permute"]}
     for variant, db in (("double_buffered", True), ("blocking", False)):
@@ -342,7 +350,8 @@ def sp_ring_dryrun(*, batch: int = 2, seq: int = 256, d_model: int = 64,
         def fwd(p, x, _r=recipe, _db=db):
             with use_recipe(_r):
                 o, _ = attn.gqa_attention(p, x, n_heads=n_heads, n_kv=n_kv,
-                                          head_dim=head_dim, sp_ring_double_buffer=_db)
+                                          head_dim=head_dim, sp_ring_double_buffer=_db,
+                                          attn_impl=attn_impl)
             return o
 
         with mesh:
@@ -372,7 +381,8 @@ def sp_ring_dryrun(*, batch: int = 2, seq: int = 256, d_model: int = 64,
 
 def serve_dryrun(*, arch: str = "phi4-mini-3.8b", slots: int = 8,
                  max_len: int = 64, grid: tuple[int, int] = (4, 2),
-                 microbatches: int = 2, verbose: bool = True) -> dict:
+                 microbatches: int = 2, attn_impl: str | None = None,
+                 verbose: bool = True) -> dict:
     """Dry-run the serving engine's explicit tensor-parallel decode step
     (:func:`repro.serve.tp_decode.make_tp_decode_step`): lower + compile one
     continuous-batching decode step on a (data, model) fake mesh and
@@ -387,6 +397,12 @@ def serve_dryrun(*, arch: str = "phi4-mini-3.8b", slots: int = 8,
     is the negative control: no sibling compute exists, the reductions land
     on the def-use chain, and the walker must see serialized collectives —
     proving the gate measures the schedule, not walker blindness.
+
+    ``attn_impl="interpret"`` routes each microbatch's attention through the
+    split-KV flash-decoding Pallas kernel in interpret mode, proving the
+    staggered schedule still serializes nothing with the kernel in the
+    traced program (the kernel is microbatch ``s``'s compute — the sibling
+    that hides microbatch ``s-1``'s Iallreduce).
     """
     from repro.core.compat import make_mesh
     from repro.launch import hlo_walk
@@ -405,9 +421,11 @@ def serve_dryrun(*, arch: str = "phi4-mini-3.8b", slots: int = 8,
     active = jax.ShapeDtypeStruct((slots,), np.bool_)
 
     out: dict = {"arch": arch, "slots": slots, "max_len": max_len,
-                 "grid": list(grid), "microbatches": microbatches}
+                 "grid": list(grid), "microbatches": microbatches,
+                 "attn_impl": attn_impl}
     for variant, mb in (("staggered", microbatches), ("single", 1)):
-        step = make_tp_decode_step(cfg, mesh, slots=slots, microbatches=mb)
+        step = make_tp_decode_step(cfg, mesh, slots=slots, microbatches=mb,
+                                   attn_impl=attn_impl)
         compiled = jax.jit(step).lower(params, state, batch, active).compile()
         st = hlo_walk.analyze(compiled.as_text())
         out[variant] = {
@@ -555,6 +573,13 @@ def main() -> None:
     ap.add_argument("--serve-slots", type=int, default=8, help="batch slots for --serve")
     ap.add_argument("--serve-microbatches", type=int, default=2,
                     help="stagger depth for --serve (1 = negative control)")
+    ap.add_argument("--attn-impl", default=None, choices=["jnp", "interpret"],
+                    help="attention kernel impl for the --sp-ring/--serve "
+                         "gates: 'interpret' traces the Pallas kernels "
+                         "(carry-state flash ring step / split-KV decode) in "
+                         "interpret mode so the 0-serialized verdict is "
+                         "proven with the kernels in the program; default "
+                         "keeps the jnp bodies")
     ap.add_argument("--plan-report", default=None, metavar="PATH",
                     help="run every comm-plan dry run (SUMMA, ragged SUMMA, "
                          "sp ring — dense and ragged seq — and the serving "
@@ -589,7 +614,8 @@ def main() -> None:
 
     if args.sp_ring:
         grid = tuple(int(x) for x in args.sp_ring_grid.split("x"))
-        rep = sp_ring_dryrun(seq=args.sp_ring_seq, grid=grid)
+        rep = sp_ring_dryrun(seq=args.sp_ring_seq, grid=grid,
+                             attn_impl=args.attn_impl)
         bad = 0
         for v in ("double_buffered", "blocking"):
             bad += rep[v]["plan"]["serialized"]  # ring permutes on the chain
@@ -602,7 +628,8 @@ def main() -> None:
     if args.serve:
         grid = tuple(int(x) for x in args.serve_grid.split("x"))
         rep = serve_dryrun(grid=grid, slots=args.serve_slots,
-                           microbatches=args.serve_microbatches)
+                           microbatches=args.serve_microbatches,
+                           attn_impl=args.attn_impl)
         stag = rep["staggered"]
         bad = stag["serialized"]  # 0 serialized collectives per decode step
         bad += 0 if stag["plan"]["agree"] else 1

@@ -41,10 +41,6 @@ op costs by the product of enclosing trip counts.  It produces:
                            static proof of comm/compute overlap for the
                            double-buffered SUMMA and ring-attention rings.
 
-``permutes`` / ``permute_overlap_fraction`` survive as thin deprecation
-shims over the kind-generic fields (PR 2 callers keep working unchanged,
-with a ``DeprecationWarning``).
-
 Wire bytes vs valid bytes
 -------------------------
 Ragged (v-collective) programs move *padded capacity* buffers over the
@@ -65,16 +61,13 @@ from __future__ import annotations
 
 import dataclasses
 import re
-import warnings
 from typing import Iterable, Mapping
 
 __all__ = [
     "HloStats",
     "CollectiveClass",
-    "PermuteClass",
     "analyze",
     "classify_collectives",
-    "classify_permutes",
     "plan_agreement",
     "top_contributors",
 ]
@@ -280,19 +273,6 @@ class CollectiveClass:
         if self.classification != "serialized":
             return 0.0
         return self.payload_bytes * self.mult * self.factor
-
-
-# deprecation shim: PR 2's permute-only verdict is the kind-generic one
-PermuteClass = CollectiveClass
-
-
-def _warn_permute_shim(name: str, replacement: str) -> None:
-    warnings.warn(
-        f"HloStats.{name} is a PR-2 deprecation shim; use the kind-generic "
-        f"{replacement} instead",
-        DeprecationWarning,
-        stacklevel=3,
-    )
 
 
 class _OverlapAnalyzer:
@@ -508,28 +488,6 @@ class HloStats:
             }
         return out
 
-    # ---- deprecation shims (PR 2 permute-only API) ---------------------------
-    @property
-    def permutes(self) -> list:
-        """PR 2 shim: the collective-permute subset of ``collectives``."""
-        _warn_permute_shim("permutes", 'of_kind("collective-permute")')
-        return self.of_kind("collective-permute")
-
-    @property
-    def permutes_overlapped(self) -> int:
-        _warn_permute_shim("permutes_overlapped", 'collectives_overlapped("collective-permute")')
-        return self.collectives_overlapped("collective-permute")
-
-    @property
-    def permutes_serialized(self) -> int:
-        _warn_permute_shim("permutes_serialized", 'collectives_serialized("collective-permute")')
-        return self.collectives_serialized("collective-permute")
-
-    @property
-    def permute_overlap_fraction(self) -> float | None:
-        _warn_permute_shim("permute_overlap_fraction", 'overlap_fraction("collective-permute")')
-        return self.overlap_fraction("collective-permute")
-
 
 def analyze(hlo_text: str, *, valid_fractions: Mapping[str, float] | None = None) -> HloStats:
     """Walk optimized HLO into :class:`HloStats`.
@@ -701,16 +659,6 @@ def classify_collectives(
     return out
 
 
-def classify_permutes(hlo_text: str) -> list[CollectiveClass]:
-    """PR 2 shim: :func:`classify_collectives` restricted to
-    ``collective-permute``."""
-    warnings.warn(
-        "classify_permutes is a PR-2 deprecation shim; use "
-        'classify_collectives(hlo, kinds=("collective-permute",)) instead',
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    return classify_collectives(hlo_text, kinds=("collective-permute",))
 
 
 def top_contributors(hlo_text: str, k: int = 15) -> dict:

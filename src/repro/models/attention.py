@@ -1,18 +1,43 @@
 """Attention family: GQA (RoPE, optional QKV bias), MLA, cross-attention.
 
-Two execution modes per op:
-  * ``seq`` (train / prefill): blockwise flash attention — Pallas on TPU,
-    pure-jnp online-softmax scan elsewhere (identical math).  Under a
-    sequence-parallel ``sp_ring`` recipe this becomes
+Attention kernel dispatch
+-------------------------
+Every hot attention path dispatches through :mod:`repro.kernels.ops` to a
+Pallas kernel on TPU and a jnp form elsewhere:
+
+==========  ===============================  ================================
+Path        TPU (default)                    CPU/GPU (default)
+==========  ===============================  ================================
+seq         ``flash_attention_pallas``       ``blockwise_attention_ref``
+(train/     (blockwise online softmax,       (same math, jnp ``lax.scan``
+prefill)    KV-block grid axis)              over KV blocks)
+ring step   ``flash_attention_carry_pallas`` jnp online-softmax merge
+(sp_ring)   — one ``pallas_call`` per held   (the ``impl="jnp"`` reference
+            KV block, ``(acc, m, l)`` carry  and interpret-mode oracle)
+            threaded across ring steps
+decode      ``flash_decode_pallas``          jnp dense streaming attention
+(serving)   (split-KV grid + log-sum-exp     with pinned probability
+            combine epilogue)                rounding (bitwise oracle)
+==========  ===============================  ================================
+
+Overrides: ``attn_impl=`` on the model-facing ops (and ``impl=`` on
+:func:`attention_seq` / :func:`attention_decode` / the ring internals)
+selects ``"pallas"`` (compiled), ``"interpret"`` (Pallas interpret mode —
+the CPU correctness oracle for the kernels, used by the dry-run gates'
+``--attn-impl interpret``), or ``"jnp"``/``"ref"`` (the pure-jnp forms).
+``None`` resolves per backend as above.  Within each path the variants
+agree: ring carry-chains are bitwise-equal to single-shot flash at f32, and
+decode stays within pinned-rounding tolerance of the jnp oracle.
+
+The ring and decode structure around the kernels:
+  * ``seq`` under a sequence-parallel ``sp_ring`` recipe becomes
     :func:`ring_attention_seq`: the KV blocks rotate around the ``model``
     mesh axis with the non-blocking ``shard_ring_shift_start`` issued
     *before* each step's local attention (double-buffered, exactly like the
     SUMMA ring), so the transfer overlaps the step's math.
-  * ``decode``: single new token against a KV cache — dense streaming
-    attention.  With the cache's seq dim sharded over the ``model`` mesh
-    axis, XLA turns the softmax reductions into the cross-device
-    online-softmax merge (flash-decoding) automatically; the layout algebra
-    picks the cache layout.
+  * ``decode`` reads the whole cache per new token; with the cache-seq dim
+    sharded over ``model``, XLA merges the partial softmaxes across devices
+    (distributed flash-decoding) above whichever local kernel ran.
 
 All weights are declared via :func:`repro.models.module.pspec` with named
 dims — sharding recipes bind them to mesh axes elsewhere.
@@ -101,7 +126,8 @@ RING_ATTENTION_PLAN_INTENT = intent_of("ring")
 
 
 def _ring_attention_local(q, k, v, *, axis_name: str, causal: bool, double_buffer: bool,
-                          valid_len: int | None = None):
+                          valid_len: int | None = None, impl: str | None = None,
+                          block: int = 512):
     """Per-device body of the sequence-parallel attention ring.
 
     ``q`` (B,H,Sl,D) and ``k``/``v`` (B,G,Sl,D) are the *local* seq chunks of
@@ -119,6 +145,16 @@ def _ring_attention_local(q, k, v, *, axis_name: str, causal: bool, double_buffe
     ``double_buffer=False`` keeps the blocking interpretation of the same
     plan — numerically bit-identical, the reference variant.
 
+    The per-step local attention dispatches on ``impl``: ``"pallas"`` /
+    ``"interpret"`` run one carry-state ``pallas_call``
+    (:func:`repro.kernels.flash_attention.flash_attention_carry_pallas`) per
+    held KV block, threading the running ``(acc, m, l)`` across ring steps
+    — the per-step causal offset rides in via scalar prefetch since
+    ``axis_index`` is traced; ``"jnp"`` (the non-TPU default) keeps the jnp
+    online-softmax merge below as the reference.  The two agree bitwise at
+    the carry level per construction of the kernel (and the kernel's
+    R-step chain equals single-shot flash bitwise at f32).
+
     ``valid_len`` enables *ragged* sequence shards (S % R != 0): the global
     sequence is padded to R * Sl and positions >= valid_len are masked out
     of every score block — the zero-padded KV rides the ring at capacity
@@ -132,6 +168,39 @@ def _ring_attention_local(q, k, v, *, axis_name: str, causal: bool, double_buffe
     G = k.shape[1]
     rep = Hq // G
     scale = D ** -0.5
+    impl = impl or ("pallas" if jax.default_backend() == "tpu" else "jnp")
+
+    if impl not in ("jnp", "ref"):
+        # carry-state flash kernel: one pallas_call per ring step over the
+        # resident Q chunk vs the held KV block, (acc, m, l) threaded across
+        # steps instead of re-merged in jnp
+        bq_ = min(block, Sl)
+
+        def compute_k(acc, kv, s):
+            kb, vb = kv
+            # after s hops of +1, rank r holds the KV block of rank (r-s)%R
+            return ops.flash_attention_carry(
+                q, kb, vb, acc,
+                q_offset=me * Sl, k_offset=((me - s) % R) * Sl,
+                valid_len=valid_len, causal=causal, scale=scale,
+                impl=impl, bq=bq_, bk=bq_,
+            )
+
+        acc0 = (
+            jnp.zeros((B, Hq, Sl, D), jnp.float32),
+            jnp.full((B, Hq, Sl), -1e30, jnp.float32),
+            jnp.zeros((B, Hq, Sl), jnp.float32),
+        )
+        plan = ring(
+            R,
+            transfer=lambda kv, s: shard_ring_shift_start(kv, axis_name, 1),
+            compute=compute_k,
+            epilogue=lambda acc, kv: (
+                acc[0] / jnp.where(acc[2] == 0.0, 1.0, acc[2])[..., None]
+            ).astype(q.dtype),
+        )
+        return plan.run((k, v), acc0, double_buffer=double_buffer)
+
     qg = q.reshape(B, G, rep, Sl, D)
     q_pos = me * Sl + jnp.arange(Sl)
 
@@ -179,7 +248,8 @@ def _ring_attention_local(q, k, v, *, axis_name: str, causal: bool, double_buffe
 
 def ring_attention_seq(q, k, v, *, mesh, axis_name: str = "model", q_spec=None,
                        kv_spec=None, causal: bool = True, double_buffer: bool = True,
-                       slice_output: bool = True):
+                       slice_output: bool = True, impl: str | None = None,
+                       block: int = 512):
     """Sequence-parallel ring attention over the ``axis_name`` mesh axis.
 
     The distributed twin of :func:`attention_seq`: q (B,H,S,D) and k/v
@@ -223,10 +293,12 @@ def ring_attention_seq(q, k, v, *, mesh, axis_name: str = "model", q_spec=None,
     def body(ql, kl, vl):
         return _ring_attention_local(ql, kl, vl, axis_name=axis_name,
                                      causal=causal, double_buffer=double_buffer,
-                                     valid_len=valid_len)
+                                     valid_len=valid_len, impl=impl, block=block)
 
+    # check_rep=False: pallas_call has no replication rule (harmless here —
+    # every output is plainly seq-sharded like q)
     out = shard_map(body, mesh=mesh, in_specs=(q_spec, kv_spec, kv_spec),
-                    out_specs=q_spec)(q, k, v)
+                    out_specs=q_spec, check_rep=False)(q, k, v)
     # ``slice_output=False`` hands the padded (B,H,R*cap,D) output back to the
     # caller so the pad slice can ride *through* the per-position output
     # projection and land terminal (nothing downstream), instead of sitting
@@ -248,7 +320,8 @@ def _ring_applicable(recipe, q, k) -> bool:
     return R > 1 and S >= 1 and k.shape[2] == S and q.shape[1] % k.shape[1] == 0
 
 
-def attention_decode(q, k_cache, v_cache, cache_len, *, q_positions=None):
+def attention_decode(q, k_cache, v_cache, cache_len, *, q_positions=None,
+                     impl: str | None = None, block: int = 512):
     """q (B,H,S,D) new queries; caches (B,G,T,D); positions >= cache_len are
     masked.  ``q_positions`` (B,S) are the queries' absolute positions: cache
     slot ``t`` is visible to query ``j`` iff ``t <= q_positions[b, j]`` —
@@ -257,13 +330,27 @@ def attention_decode(q, k_cache, v_cache, cache_len, *, q_positions=None):
     at its own position.  With S == 1 and uniform positions this reduces to
     the classic single-token decode mask.
 
-    Dense streaming attention: reading the whole cache is the roofline
-    minimum for decode; softmax reductions over a sharded cache-seq dim
-    become the distributed flash-decoding merge under GSPMD.
+    Reading the whole cache is the roofline minimum for decode; softmax
+    reductions over a sharded cache-seq dim become the distributed
+    flash-decoding merge under GSPMD above whichever local impl ran.
+    ``impl`` dispatch (see the module docstring's table): ``"pallas"`` /
+    ``"interpret"`` run the split-KV Pallas kernel
+    (:func:`repro.kernels.flash_decode.flash_decode_pallas`, KV-block grid +
+    log-sum-exp combine) with the output pinned at the activation-dtype
+    boundary; ``"jnp"``/``"ref"`` (the non-TPU default) keep the dense jnp
+    path below, whose pinned probability rounding is the serving oracle.
     """
     B, Hq, S, D = q.shape
     _, G, T, _ = k_cache.shape
     rep = Hq // G
+    impl = impl or ("pallas" if jax.default_backend() == "tpu" else "jnp")
+    if impl not in ("jnp", "ref"):
+        o = ops.flash_decode(q, k_cache, v_cache, cache_len,
+                             q_positions=q_positions, impl=impl, bk=block)
+        # same pinned boundary as the jnp path's rounded probabilities: the
+        # kernel output rounds to the activation dtype behind a barrier so
+        # schedule variants cannot fold the convert differently
+        return pin(o)
     # the cache streams stay in their storage dtype (bf16); scores and the
     # p@v contraction accumulate in f32 — reading the cache IS the decode
     # roofline term, so it is never widened in HBM
@@ -349,7 +436,7 @@ def gqa_attention(p, x, *, n_heads: int, n_kv: int, head_dim: int, rope_theta: f
                 q, k, v, mesh=recipe.mesh, axis_name="model",
                 q_spec=recipe.spec("q"), kv_spec=recipe.spec("kv"),
                 causal=causal, double_buffer=sp_ring_double_buffer,
-                slice_output=False,
+                slice_output=False, impl=attn_impl, block=block,
             )
             o = shard_act(o, "attn_out")
             out = jnp.einsum("bhsd,hdm->bsm", o, p["wo"].astype(x.dtype))
@@ -358,7 +445,8 @@ def gqa_attention(p, x, *, n_heads: int, n_kv: int, head_dim: int, rope_theta: f
             # slice is terminal instead of a mid-graph reshard.
             return shard_act(out, "hidden")[:, :S], new_cache
         q_pos = positions if getattr(positions, "ndim", 1) == 2 else None
-        o = pin(attention_decode(q, kc, vc, new_len, q_positions=q_pos))
+        o = pin(attention_decode(q, kc, vc, new_len, q_positions=q_pos,
+                                 impl=attn_impl, block=block))
         out = pin(jnp.einsum("bhsd,hdm->bsm", o, p["wo"].astype(x.dtype)))
         return shard_act(out, "hidden"), new_cache
     if _ring_applicable(recipe, q, k):
@@ -366,7 +454,7 @@ def gqa_attention(p, x, *, n_heads: int, n_kv: int, head_dim: int, rope_theta: f
             q, k, v, mesh=recipe.mesh, axis_name="model",
             q_spec=recipe.spec("q"), kv_spec=recipe.spec("kv"),
             causal=causal, double_buffer=sp_ring_double_buffer,
-            slice_output=False,
+            slice_output=False, impl=attn_impl, block=block,
         )
         o = shard_act(o, "attn_out")
         out = jnp.einsum("bhsd,hdm->bsm", o, p["wo"].astype(x.dtype))

@@ -160,7 +160,8 @@ class Engine:
         if mesh is not None and microbatches:
             from repro.serve.tp_decode import make_tp_decode_step
 
-            tp = make_tp_decode_step(cfg, mesh, slots=B, microbatches=microbatches)
+            tp = make_tp_decode_step(cfg, mesh, slots=B, microbatches=microbatches,
+                                     attn_impl=cfg.attn_impl)
             # NOTE: params/state are deliberately NOT committed to the TP
             # layout here — the GSPMD prefill jit would then compile
             # distributed math whose FP reduction order diverges from the

@@ -100,7 +100,7 @@ def tp_decode_specs(cfg, *, stacked: bool = True):
 
 
 def make_tp_decode_step(cfg, mesh, *, slots: int, microbatches: int = 2,
-                        double_buffer: bool = True):
+                        double_buffer: bool = True, attn_impl: str | None = None):
     """Build ``step(params, state, batch, active) -> (logits, new_state)``.
 
     ``state`` is the stacked :class:`repro.models.lm.DecodeState`;
@@ -108,6 +108,12 @@ def make_tp_decode_step(cfg, mesh, *, slots: int, microbatches: int = 2,
     (B,) bool marks slots carrying a real token this step — inactive rows'
     cache writes are masked out and their positions do not advance (the
     same per-row semantics as the fixed single-host ``decode_step``).
+
+    ``attn_impl`` picks the per-layer attention kernel under the stagger
+    plan (see ``models/attention.py``'s dispatch table): ``"pallas"`` /
+    ``"interpret"`` run the split-KV flash-decoding kernel inside each
+    microbatch's compute stage, ``None`` resolves per backend, ``"jnp"``
+    keeps the dense pinned jnp path (the token-equality oracle's form).
     """
     _check(cfg, mesh, slots, microbatches)
     # This body traces under pinned rounding (models/numerics.py): every
@@ -193,7 +199,7 @@ def make_tp_decode_step(cfg, mesh, *, slots: int, microbatches: int = 2,
                 new_k_l[s] = nk
                 new_v_l[s] = nv
                 o = _pin(attention_decode(q, nk, nv, length + c_mb[s],
-                                          q_positions=p_mb[s]))
+                                          q_positions=p_mb[s], impl=attn_impl))
                 # local head shard's partial projection — the transfer stage
                 # issues its Iallreduce; the next microbatch's math hides it.
                 # Partials stay f32 through the reduction and are rounded to

@@ -286,7 +286,7 @@ ENTRY %main (p0: f32[8,8], p1: f32[8,8]) -> f32[8,8] {
         ("collective-permute", "overlapped")
     ], cs
 
-    # per-kind stats + shims on a mixed-kind module
+    # per-kind stats on a mixed-kind module
     hlo_mixed = """HloModule mixed
 
 ENTRY %main (p0: f32[8,8], p1: f32[8,8]) -> f32[8,8] {
@@ -317,23 +317,10 @@ ENTRY %main (p0: f32[8,8], p1: f32[8,8]) -> f32[8,8] {
     assert by_kind["collective-permute"]["exposed_bytes"] == 0.0
     # byte-weighted: cp tb overlapped of (cp tb + ar 2tb) total
     assert abs(st.overlap_fraction() - 1.0 / 3.0) < 1e-12
-    # permute-only deprecation shims: still correct, but warn (call sites
-    # have all migrated onto the kind-generic API — the shims only survive
-    # for out-of-repo PR-2 consumers)
-    import pytest
-
-    with pytest.warns(DeprecationWarning):
-        perms = st.permutes
-    assert len(perms) == 1 and perms[0].kind == "collective-permute"
-    with pytest.warns(DeprecationWarning):
-        assert st.permutes_overlapped == 1
-    with pytest.warns(DeprecationWarning):
-        assert st.permutes_serialized == 0
-    with pytest.warns(DeprecationWarning):
-        assert st.permute_overlap_fraction == 1.0
-    with pytest.warns(DeprecationWarning):
-        shim = hlo_walk.classify_permutes(hlo_mixed)
-    assert [c.kind for c in shim] == ["collective-permute"]
+    # the PR-2 permute-only shims (st.permutes etc.) are gone: the
+    # kind-generic API above is the only surface
+    assert not hasattr(st, "permutes")
+    assert not hasattr(hlo_walk, "classify_permutes")
 
 
 def test_roofline_dominant_consistent_with_exposed_discount():

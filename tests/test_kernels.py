@@ -159,3 +159,202 @@ def test_flash_attention_long_context_blocks():
     v = jnp.asarray(RNG.standard_normal((B, H, S, D)), jnp.float32)
     out = ops.flash_attention(q, k, v, impl="interpret", bq=512, bk=512)
     np.testing.assert_allclose(out, ref.attention_ref(q, k, v), rtol=3e-4, atol=3e-4)
+
+
+# ------------------------------------------------- ragged seq shapes ---------
+
+@pytest.mark.parametrize("S", [100, 30, 3])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_ragged_seq(S, causal):
+    """Seq lengths that do not divide (or are smaller than) the block sizes:
+    the kernel pads to block multiples and masks the padded keys, so ragged
+    seq shards (ragged_seq_extents) use it directly."""
+    B, Hq, Hkv, D = 2, 4, 2, 16
+    q = jnp.asarray(RNG.standard_normal((B, Hq, S, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, Hkv, S, D)), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=causal, impl="interpret", bq=32, bk=32)
+    assert out.shape == q.shape
+    expect = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, expect, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_seq_smaller_than_block():
+    """S < bq and S < bk (the S=100, block=512 prefill-tail case)."""
+    B, H, S, D = 1, 2, 100, 16
+    q = jnp.asarray(RNG.standard_normal((B, H, S, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, H, S, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, H, S, D)), jnp.float32)
+    out = ops.flash_attention(q, k, v, impl="interpret", bq=512, bk=512)
+    np.testing.assert_allclose(out, ref.attention_ref(q, k, v), rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------- carry-state flash kernel --------
+
+def _chain(q, k, v, R, *, causal=True, valid_len=None, bq=32, bk=32):
+    """Run the carry kernel over the R KV chunks in block order and
+    normalize — the ring-step composition (offsets as traced scalars, the
+    shard_map axis_index case)."""
+    Sl = k.shape[2] // R
+    carry = None
+    for t in range(R):
+        kb = k[:, :, t * Sl:(t + 1) * Sl]
+        vb = v[:, :, t * Sl:(t + 1) * Sl]
+        carry = ops.flash_attention_carry(
+            q, kb, vb, carry, q_offset=jnp.int32(0), k_offset=jnp.int32(t * Sl),
+            valid_len=valid_len, causal=causal, impl="interpret", bq=bq, bk=bk)
+    acc, m, l = carry
+    l = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l[..., None]).astype(q.dtype)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_carry_chain_bitwise_vs_single_shot(causal):
+    """The tentpole invariant: R carry-kernel steps over the R KV chunks of a
+    sequence compose to EXACTLY the single-shot flash kernel at f32 — same
+    arithmetic, same block boundaries, the state just round-trips through
+    HBM between pallas_calls instead of living in VMEM scratch."""
+    B, Hq, Hkv, S, D, R = 2, 4, 2, 128, 16, 4
+    q = jnp.asarray(RNG.standard_normal((B, Hq, S, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, Hkv, S, D)), jnp.float32)
+    single = ops.flash_attention(q, k, v, causal=causal, impl="interpret",
+                                 bq=32, bk=32)
+    chained = _chain(q, k, v, R, causal=causal, bq=32, bk=32)
+    assert np.array_equal(np.asarray(chained), np.asarray(single)), (
+        np.abs(np.asarray(chained) - np.asarray(single)).max())
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 2), (8, 1)])
+def test_flash_carry_gqa_vs_ref(hq, hkv):
+    """Per-step carry state (GQA group mapping) vs the jnp merge oracle."""
+    B, S, D, R = 2, 64, 16, 4
+    Sl = S // R
+    q = jnp.asarray(RNG.standard_normal((B, hq, Sl, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, hkv, S, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, hkv, S, D)), jnp.float32)
+    carry = cref = None
+    me = 2  # resident rank: q chunk sits at global offset me*Sl
+    for t in range(R):
+        kb = k[:, :, t * Sl:(t + 1) * Sl]
+        vb = v[:, :, t * Sl:(t + 1) * Sl]
+        carry = ops.flash_attention_carry(
+            q, kb, vb, carry, q_offset=me * Sl, k_offset=t * Sl,
+            causal=True, impl="interpret", bq=16, bk=16)
+        cref = ref.flash_carry_ref(q, kb, vb, cref, q_offset=me * Sl,
+                                   k_offset=t * Sl, causal=True)
+        for got, want, name in zip(carry, cref, ("acc", "m", "l")):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=2e-4, atol=2e-4, err_msg=f"step {t} {name}")
+
+
+def test_flash_carry_ragged_valid_len():
+    """Ragged ring shards: global positions >= valid_len are masked; a step
+    whose KV block is entirely padding must leave the carry semantics intact
+    (self-healing -inf merge)."""
+    B, H, S, D, R = 1, 2, 64, 16, 4
+    Sl = S // R
+    valid = 34  # rank 2's block is half padding, rank 3's all padding
+    q = jnp.asarray(RNG.standard_normal((B, H, Sl, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, H, S, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, H, S, D)), jnp.float32)
+    carry = cref = None
+    for t in range(R):
+        kb = k[:, :, t * Sl:(t + 1) * Sl]
+        vb = v[:, :, t * Sl:(t + 1) * Sl]
+        carry = ops.flash_attention_carry(
+            q, kb, vb, carry, q_offset=0, k_offset=t * Sl, valid_len=valid,
+            causal=False, impl="interpret", bq=16, bk=16)
+        cref = ref.flash_carry_ref(q, kb, vb, cref, q_offset=0, k_offset=t * Sl,
+                                   valid_len=valid, causal=False)
+    acc, m, l = carry
+    out = acc / jnp.where(l == 0.0, 1.0, l)[..., None]
+    aref, mref, lref = cref
+    outref = aref / jnp.where(lref == 0.0, 1.0, lref)[..., None]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(outref),
+                               rtol=2e-4, atol=2e-4)
+    # and the composition over valid keys == dense attention on them
+    dense = ref.attention_ref(q, k[:, :, :valid], v[:, :, :valid], causal=False)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(dense, np.float32),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_carry_ragged_q_chunk():
+    """Resident Q chunks that do not divide the block size pad-and-mask, and
+    the padded rows' carry stays at the (0, -inf, 0) identity across steps."""
+    B, H, Sq, Skv, D = 1, 2, 30, 30, 16
+    q = jnp.asarray(RNG.standard_normal((B, H, Sq, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, H, Skv, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, H, Skv, D)), jnp.float32)
+    carry = ops.flash_attention_carry(q, k, v, None, q_offset=0, k_offset=0,
+                                      causal=True, impl="interpret", bq=32, bk=32)
+    cref = ref.flash_carry_ref(q, k, v, None, q_offset=0, k_offset=0, causal=True)
+    for got, want, name in zip(carry, cref, ("acc", "m", "l")):
+        assert got.shape == want.shape, name
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4, err_msg=name)
+
+
+# ----------------------------------------------- split-KV flash decode -------
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+def test_flash_decode_gqa(hq, hkv):
+    """Split-KV decode vs the dense oracle: per-row cache lengths, GQA group
+    stacking, T % bk != 0 (padded tail masked)."""
+    B, T, D = 3, 96, 16
+    q = jnp.asarray(RNG.standard_normal((B, hq, 1, D)), jnp.float32)
+    kc = jnp.asarray(RNG.standard_normal((B, hkv, T, D)), jnp.float32)
+    vc = jnp.asarray(RNG.standard_normal((B, hkv, T, D)), jnp.float32)
+    clen = jnp.asarray([5, 50, 96], jnp.int32)
+    out = ops.flash_decode(q, kc, vc, clen, impl="interpret", bk=40)
+    expect = ref.decode_attention_ref(q, kc, vc, clen)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_decode_chunk_positions():
+    """Multi-token chunks with per-row absolute positions: cache slot t is
+    visible to query j iff t <= q_positions[b, j] — continuous batching's
+    per-slot causal mask."""
+    B, H, G, S, T, D = 2, 4, 2, 4, 64, 16
+    q = jnp.asarray(RNG.standard_normal((B, H, S, D)), jnp.float32)
+    kc = jnp.asarray(RNG.standard_normal((B, G, T, D)), jnp.float32)
+    vc = jnp.asarray(RNG.standard_normal((B, G, T, D)), jnp.float32)
+    pos = jnp.asarray([[10, 11, 12, 13], [0, 1, 2, 3]], jnp.int32)
+    clen = jnp.asarray([14, 4], jnp.int32)
+    out = ops.flash_decode(q, kc, vc, clen, q_positions=pos, impl="interpret", bk=32)
+    expect = ref.decode_attention_ref(q, kc, vc, clen, q_positions=pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_decode_vs_model_decode_tolerance():
+    """The kernel path agrees with the model-facing pinned jnp decode within
+    pinned-rounding tolerance (the jnp path rounds normalized probabilities
+    to the cache dtype; the kernel rounds the unnormalized tile)."""
+    from repro.models.attention import attention_decode
+
+    B, H, G, T, D = 2, 4, 2, 64, 16
+    q = jnp.asarray(RNG.standard_normal((B, H, 1, D)), jnp.bfloat16)
+    kc = jnp.asarray(RNG.standard_normal((B, G, T, D)), jnp.bfloat16)
+    vc = jnp.asarray(RNG.standard_normal((B, G, T, D)), jnp.bfloat16)
+    clen = jnp.asarray([30, 64], jnp.int32)
+    jnp_o = attention_decode(q, kc, vc, clen, impl="jnp")
+    ker_o = attention_decode(q, kc, vc, clen, impl="interpret")
+    np.testing.assert_allclose(np.asarray(jnp_o, np.float32),
+                               np.asarray(ker_o, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_flash_decode_bf16_cache():
+    B, H, G, T, D = 2, 4, 2, 64, 16
+    q = jnp.asarray(RNG.standard_normal((B, H, 1, D)), jnp.bfloat16)
+    kc = jnp.asarray(RNG.standard_normal((B, G, T, D)), jnp.bfloat16)
+    vc = jnp.asarray(RNG.standard_normal((B, G, T, D)), jnp.bfloat16)
+    clen = jnp.asarray([30, 64], jnp.int32)
+    out = ops.flash_decode(q, kc, vc, clen, impl="interpret", bk=32)
+    expect = ref.decode_attention_ref(q, kc, vc, clen)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=3e-2, atol=3e-2)

@@ -203,6 +203,64 @@ print('OK')
     assert "OK" in out
 
 
+def test_ring_attention_kernel_impl_matches_jnp(distributed):
+    """ISSUE 8 tentpole: the ring with the carry-state Pallas flash kernel
+    (interpret mode) as its per-step compute matches the jnp-merge ring and
+    the single-device reference — dense AND ragged shards, causal and not —
+    and the double-buffered/blocking variants of the kernel ring stay
+    bit-identical (the plan only moves the issue point, never the math)."""
+    out = distributed(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.compat import make_mesh
+from repro.kernels.ref import attention_ref
+from repro.models import attention as attn
+
+mesh = make_mesh((2, 4), ('data', 'model'))
+rng = np.random.default_rng(21)
+B, H, G, D = 2, 4, 2, 16
+for S in (32, 30):  # dividing and ragged over R=4
+    q = jnp.asarray(rng.standard_normal((B, H, S, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, G, S, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, G, S, D)), jnp.float32)
+    for causal in (True, False):
+        ref = attention_ref(q, k, v, causal=causal)
+        kdb = attn.ring_attention_seq(q, k, v, mesh=mesh, causal=causal,
+                                      double_buffer=True, impl='interpret')
+        kbl = attn.ring_attention_seq(q, k, v, mesh=mesh, causal=causal,
+                                      double_buffer=False, impl='interpret')
+        jn = attn.ring_attention_seq(q, k, v, mesh=mesh, causal=causal,
+                                     double_buffer=True, impl='jnp')
+        assert kdb.shape == q.shape, (S, kdb.shape)
+        assert np.array_equal(np.asarray(kdb), np.asarray(kbl)), (S, causal)
+        assert np.abs(np.asarray(kdb) - np.asarray(jn)).max() < 1e-5, (S, causal)
+        assert np.abs(np.asarray(kdb) - np.asarray(ref)).max() < 1e-5, (S, causal)
+print('OK')
+"""
+    )
+    assert "OK" in out
+
+
+def test_sp_ring_dryrun_kernel_impl_zero_serialized(distributed):
+    """The overlap gate holds with the Pallas kernel in the traced program:
+    each ring step's pallas_call consumes the held KV block as a sibling of
+    the in-flight rotation, so every permute still classifies overlapped."""
+    out = distributed(
+        """
+from repro.launch.dryrun import sp_ring_dryrun
+
+rep = sp_ring_dryrun(seq=64, grid=(2, 4), attn_impl='interpret', verbose=False)
+for variant in ('double_buffered', 'blocking'):
+    r = rep[variant]
+    assert r['serialized'] == 0, (variant, r)
+    assert r['overlap_by_kind']['collective-permute']['overlapped'] == 6
+    assert r['plan']['agree'], (variant, r['plan'])
+print('OK')
+"""
+    )
+    assert "OK" in out
+
+
 def test_gqa_attention_prefill_chunk_ring_matches_no_recipe(distributed):
     """The serving prefill path: a whole-prompt chunk through the decode-mode
     op (``cache=`` + ``prefill=True``) under an sp_ring recipe runs the ring

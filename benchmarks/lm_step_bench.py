@@ -13,6 +13,13 @@ import sys, os, time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+if any(a.startswith("--moe") for a in sys.argv):
+    # the expert-parallel MoE rows lower a real (data, model) mesh program —
+    # fake the devices before jax initializes
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    ).strip()
+
 import jax
 import jax.numpy as jnp
 
@@ -123,6 +130,62 @@ def attn_kernel_rows() -> list[dict]:
     return rows
 
 
+def moe_dispatch_rows() -> list[dict]:
+    """Dense capacity dispatch vs expert-parallel ragged a2a dispatch on the
+    phi3.5-MoE smoke shapes over a fake (2, 4) mesh: tokens/sec plus the
+    modeled a2a valid/wire bytes against the dense path's replication bytes
+    (valid must be strictly below dense replication — the whole point of
+    routing tokens instead of replicating the expert table)."""
+    from repro.core.compat import make_mesh
+    from repro.models import ffn
+    from repro.models.module import init_params
+    from repro.models.sharding import make_recipe, use_recipe
+
+    cfg = configs.get("phi3.5-moe-42b-a6.6b", smoke=True)
+    mesh = make_mesh((2, 4), ("data", "model"))
+    recipe = make_recipe(cfg, mesh)
+    B, S, m, E, k = 4, 64, cfg.d_model, cfg.n_experts, cfg.moe_top_k
+    D, R = 2, 4
+    T = B * S
+    Tl = (B // D) * (S // R)
+    cf = cfg.moe_capacity_factor
+    counts = ffn.moe_ep_counts(E, Tl, k, cf)
+    sched = ffn.moe_ep_schedule(E, R, counts, 2)
+    dense_cap = int(max(k, round(k * T / E * cf)))  # moe_ffn's global C
+    model = ffn.moe_comm_model(sched, d_model=m, itemsize=4,
+                               dense_capacity=dense_cap)
+    assert model["valid_bytes"] < model["dense_replication_bytes"]
+
+    p = init_params(ffn.moe_specs(m, cfg.d_ff, E), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, m), jnp.float32)
+
+    dense_fn = jax.jit(lambda xv: ffn.moe_ffn(p, xv, n_experts=E, top_k=k,
+                                              capacity_factor=cf)[0])
+    def ep(xv):
+        with use_recipe(recipe):
+            return ffn.moe_expert_parallel(p, xv, n_experts=E, top_k=k,
+                                           counts=counts, n_groups=2)[0]
+    with mesh:
+        ep_fn = jax.jit(ep)
+        t_ep = _time(lambda: ep_fn(x))
+    t_dense = _time(lambda: dense_fn(x))
+
+    def row(mode, t, wire, valid):
+        return {"mode": mode, "tokens_per_s": T / t, "us_per_call": t * 1e6,
+                "model_wire_bytes": wire, "model_valid_bytes": valid,
+                "shape": f"B{B}xS{S}xm{m}xE{E}k{k}", "grid": "2x4"}
+
+    return [
+        # dense/grouped dispatch replicates the full (E*C, m) scatter table
+        # across the model axis instead of moving routed tokens: wire ==
+        # valid == the replication bytes
+        row("dense_capacity", t_dense,
+            model["dense_replication_bytes"], model["dense_replication_bytes"]),
+        row("expert_parallel", t_ep,
+            model["wire_bytes"], model["valid_bytes"]),
+    ]
+
+
 if __name__ == "__main__":
     import argparse, json
 
@@ -131,14 +194,38 @@ if __name__ == "__main__":
                     help="write the attention-kernel rows to this JSON path")
     ap.add_argument("--kernels-only", action="store_true",
                     help="skip the per-arch table (fast nightly artifact run)")
+    ap.add_argument("--moe-dispatch-json", default=None,
+                    help="write the dense-vs-expert-parallel MoE dispatch "
+                         "rows to this JSON path (nightly artifact)")
+    ap.add_argument("--moe-only", action="store_true",
+                    help="run only the MoE dispatch rows (fast artifact run)")
     args = ap.parse_args()
+
+    if args.moe_only:
+        moe = moe_dispatch_rows()
+        lines = ["mode,shape,grid,tokens_per_s,model_wire_bytes,model_valid_bytes"]
+        lines += [f"{r['mode']},{r['shape']},{r['grid']},{r['tokens_per_s']:.1f},"
+                  f"{r['model_wire_bytes']},{r['model_valid_bytes']}" for r in moe]
+        print("\n".join(lines))
+        if args.moe_dispatch_json:
+            with open(args.moe_dispatch_json, "w") as f:
+                json.dump({"rows": moe, "backend": jax.default_backend()}, f, indent=2)
+        sys.exit(0)
 
     lines = [] if args.kernels_only else run()
     kern = attn_kernel_rows()
     lines += ["", "kernel,impl,shape,us_per_call"]
     lines += [f"{r['kernel']},{r['impl']},{r['shape']},{r['us_per_call']:.0f}"
               for r in kern]
+    moe = moe_dispatch_rows() if args.moe_dispatch_json else None
+    if moe:
+        lines += ["", "mode,shape,grid,tokens_per_s,model_wire_bytes,model_valid_bytes"]
+        lines += [f"{r['mode']},{r['shape']},{r['grid']},{r['tokens_per_s']:.1f},"
+                  f"{r['model_wire_bytes']},{r['model_valid_bytes']}" for r in moe]
     print("\n".join(lines).lstrip("\n"))
     if args.attn_kernel_json:
         with open(args.attn_kernel_json, "w") as f:
             json.dump({"rows": kern, "backend": jax.default_backend()}, f, indent=2)
+    if args.moe_dispatch_json and moe:
+        with open(args.moe_dispatch_json, "w") as f:
+            json.dump({"rows": moe, "backend": jax.default_backend()}, f, indent=2)

@@ -61,6 +61,10 @@ class ArchConfig:
     # data-parallel degree so routing/capacity stay shard-local and the
     # dispatch scatter never crosses the data axis (§Perf lever)
     moe_groups: int = 0
+    # "auto" = dense/grouped capacity dispatch; "ep" = expert-parallel ragged
+    # all-to-all dispatch over the model axis (repro.models.ffn docstring) —
+    # falls back to auto (with a warning) when the recipe cannot host it
+    moe_dispatch: str = "auto"
 
     # MLA (minicpm3)
     mla_q_rank: int = 768

@@ -8,6 +8,9 @@ CONFIG = ArchConfig(
     vocab=32064, head_dim=128,
     ffn_kind="moe", n_experts=16, moe_top_k=2,
     moe_groups=16,  # grouped dispatch over the data axis (§Perf: confirmed win)
+    # expert-parallel ragged a2a dispatch when the recipe has a model axis;
+    # grouped dispatch above stays the fallback for ineligible meshes
+    moe_dispatch="ep",
 )
 
 SMOKE = ArchConfig(

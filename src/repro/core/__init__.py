@@ -58,11 +58,11 @@ Comm plans
 ----------
 :mod:`repro.core.plan` lifts the request layer one level up: an algorithm
 declares its communication schedule once (:func:`ring` / :func:`halo` /
-:func:`pipeline` / ``stagger`` — the MPI persistent-request / ``MPI_Start``
-pattern) and the planner emits the double-buffered program with a
-bit-identical blocking interpretation.  Each plan carries a declared
-overlap intent that ``repro.launch.hlo_walk.plan_agreement`` verifies
-against the compiled HLO.
+:func:`pipeline` / ``stagger`` / :func:`dispatch` — the MPI
+persistent-request / ``MPI_Start`` pattern) and the planner emits the
+double-buffered program with a bit-identical blocking interpretation.  Each
+plan carries a declared overlap intent that
+``repro.launch.hlo_walk.plan_agreement`` verifies against the compiled HLO.
 
 Serving on the comm layer
 -------------------------
@@ -114,6 +114,41 @@ Defaults resolve per backend (TPU -> compiled Pallas, CPU -> jnp
 reference); ``impl="interpret"`` runs the same kernels through the Pallas
 interpreter so the dry-run gates (``dryrun --sp-ring/--serve
 --attn-impl interpret``) prove overlap with the real kernels in the trace.
+
+MoE dispatch
+------------
+Expert-parallel mixture-of-experts routing is the v-collective layer's
+``MPI_Alltoallv`` showcase (:func:`repro.models.ffn.moe_expert_parallel`,
+selected by ``cfg.moe_dispatch = "ep"``): the router's per-(rank, expert)
+token counts ARE the counts/displacements tables, experts shard *raggedly*
+over the model ranks (``ragged_expert_extents`` — ``n_experts`` need not
+divide the axis), and the two wire legs ride the :func:`dispatch` comm
+plan, double-buffered over expert groups so both classify *overlapped*.
+
+======================  =====================================================
+MoE phase               MPI analogue (repro.core construct)
+======================  =====================================================
+routing/slotting        shard-local counts-table fill: top-k gates scatter
+                        tokens into packed (group, dest rank, expert, slot)
+                        rows — building ``sendcounts``/``sdispls`` without
+                        touching the wire
+token dispatch          ``Ialltoallv`` (:func:`all_to_allv_start`): ragged
+                        split over the destination model ranks; zero-count
+                        experts ride through as zero split extents, padding
+                        is wire-vs-valid accounted (``dryrun --moe``)
+expert GEMMs            :func:`rank_map` over the *resident* rows only —
+                        each rank contracts its own experts' tokens, indexed
+                        through host-built displacement tables
+gated combine           the inverse ``Ialltoallv`` returns expert outputs to
+                        their token owners, concatenating back into exactly
+                        the packed scatter order before the gate-weighted sum
+schedule                :func:`dispatch` comm plan: issue group *g+1*'s
+                        dispatch before waiting on *g*, issue *g*'s combine
+                        right after its GEMMs — both a2a legs complete
+                        behind sibling expert compute (``dryrun --moe``
+                        gates 0 serialized; one group = the serialized
+                        negative control)
+======================  =====================================================
 """
 from .compat import make_mesh, shard_map
 from .dims import LayoutError, ceil_div, common_refinement, ragged_split
@@ -176,7 +211,7 @@ from .collectives import (
     dist_sharding,
     rank_map,
 )
-from .plan import CommPlan, halo, intent_of, pipeline, ring, stagger
+from .plan import CommPlan, dispatch, halo, intent_of, pipeline, ring, stagger
 from .p2p import (
     PendingTile,
     permute,
@@ -266,6 +301,7 @@ __all__ = [
     "halo",
     "pipeline",
     "stagger",
+    "dispatch",
     "intent_of",
     "send_recv",
     "permute",

@@ -1420,20 +1420,37 @@ def _issue_reduce_scatterv(
             p = next((c for c in cands[d] if c != pos), cands[d][0])
             other_masks.append((i, p, jnp.asarray(_dim_extent_list(dist, d, p))))
 
+    # displacement prefix sums over the valid stream: input block b holds
+    # stream rows [ibase[b], ibase[b+1]), output rank r wants rows
+    # [obase[r], obase[r+1])
+    ibase = [0]
+    for b in range(B):
+        ibase.append(ibase[-1] + in_exts[b])
+    obase = [0]
+    for r in range(R):
+        obase.append(obase[-1] + out_extents[r])
+
     def tile_fn(t):
         x = relayout(t, dist.tile_layout, mid_in)
-        dense = jnp.concatenate(
-            [
-                jax.lax.slice_in_dim(x, b * cap_in, b * cap_in + in_exts[b], axis=-1)
-                for b in range(B)
-            ],
-            axis=-1,
-        )
-        pieces, off = [], 0
+        # slice each output rank's rows straight out of the padded input
+        # blocks via the displacement offsets — no compacted full-stream
+        # intermediate; stream order is preserved so the reduced result is
+        # bitwise identical to compact-then-scatter
+        pieces = []
         for r in range(R):
+            parts = []
+            for b in range(B):
+                lo = max(obase[r], ibase[b])
+                hi = min(obase[r + 1], ibase[b + 1])
+                if lo >= hi:
+                    continue
+                s = b * cap_in + (lo - ibase[b])
+                parts.append(jax.lax.slice_in_dim(x, s, s + (hi - lo), axis=-1))
             e = out_extents[r]
-            blk = jax.lax.slice_in_dim(dense, off, off + e, axis=-1)
-            off += e
+            if not parts:
+                pieces.append(jnp.full(x.shape[:-1] + (cap_out,), ident, x.dtype))
+                continue
+            blk = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=-1)
             pad = [(0, 0)] * (blk.ndim - 1) + [(0, cap_out - e)]
             pieces.append(jnp.pad(blk, pad, constant_values=ident))
         stacked = jnp.stack(pieces)  # (R, *mid_out shape), block r = rank r's part

@@ -78,6 +78,11 @@ Stage signatures
 ``epilogue(carry, state) -> result``
     Optional final stage (e.g. the SUMMA reduce-scatter); receives the
     final carry and the final state.  Defaults to returning ``carry``.
+``combine(result, step) -> Pending`` (``dispatch`` plans only)
+    Issue the *return* leg for step ``step``'s compute result.  A
+    ``dispatch`` plan's compute consumes the completed transfer (the
+    arrived tiles), so the overlap comes from pipelining across steps
+    rather than within one step — see :func:`dispatch`.
 """
 from __future__ import annotations
 
@@ -86,13 +91,14 @@ from typing import Any, Callable
 
 from .request import Pending
 
-__all__ = ["CommPlan", "ring", "halo", "pipeline", "stagger", "intent_of"]
+__all__ = ["CommPlan", "ring", "halo", "pipeline", "stagger", "dispatch", "intent_of"]
 
 _INTENTS = {
     "ring": "overlapped",
     "halo": "overlapped",
     "pipeline": "serialized",
     "stagger": "overlapped",
+    "dispatch": "overlapped",
 }
 
 
@@ -119,11 +125,15 @@ class CommPlan:
     transfer: Callable[[Any, int], Pending]
     compute: Callable[[Any, Any, int], Any]
     epilogue: Callable[[Any, Any], Any] | None = None
+    # dispatch plans only: issue the return leg for one step's compute result
+    combine: Callable[[Any, int], Pending] | None = None
 
     def __post_init__(self):
         intent_of(self.kind)  # validates the kind
         if self.steps < 1:
             raise ValueError(f"plan needs at least one step, got {self.steps}")
+        if self.kind == "dispatch" and self.combine is None:
+            raise ValueError("dispatch plan needs a combine stage (the return leg)")
 
     @property
     def intent(self) -> str:
@@ -136,6 +146,15 @@ class CommPlan:
         if not isinstance(pend, Pending):
             raise TypeError(
                 f"plan transfer must return a Pending (got {type(pend).__name__}); "
+                "use the *_start form of the collective"
+            )
+        return pend
+
+    def _issue_combine(self, value, step: int) -> Pending:
+        pend = self.combine(value, step)
+        if not isinstance(pend, Pending):
+            raise TypeError(
+                f"plan combine must return a Pending (got {type(pend).__name__}); "
                 "use the *_start form of the collective"
             )
         return pend
@@ -174,6 +193,35 @@ class CommPlan:
                     self._issue(self.compute(carry, state, s), s).wait()
                     for s in range(self.steps)
                 ]
+            return self._finish(done, state)
+        if self.kind == "dispatch":
+            # two-legged exchange per step (MPI_Ialltoallv out and back): the
+            # transfer ships step s's routed payload to its owners, compute
+            # runs on the arrived tiles, and the combine leg returns the
+            # results.  Double-buffered over steps (expert groups): step
+            # s+1's dispatch is issued before step s's compute, so it
+            # completes behind it, and step s's combine completes behind
+            # step s+1's compute — with two or more steps neither leg sits
+            # on the compute chain.  With one step there is no sibling
+            # compute and both legs chain (the negative control).  The waits
+            # are pure completion points, so the blocking form (issue+wait
+            # back-to-back) is bit-identical by construction.
+            if double_buffer:
+                pend = self._issue(state, 0)
+                combines = []
+                for s in range(self.steps):
+                    nxt = self._issue(state, s + 1) if s + 1 < self.steps else None
+                    arrived = pend.wait()
+                    res = self.compute(carry, arrived, s)
+                    combines.append(self._issue_combine(res, s))
+                    pend = nxt
+                done = [c.wait() for c in combines]
+            else:
+                done = []
+                for s in range(self.steps):
+                    arrived = self._issue(state, s).wait()
+                    res = self.compute(carry, arrived, s)
+                    done.append(self._issue_combine(res, s).wait())
             return self._finish(done, state)
         if self.kind == "pipeline":
             # compute -> transfer -> compute chained through data
@@ -262,3 +310,31 @@ def stagger(
     microbatch's math.  ``epilogue(done, state)`` receives the list of
     completed results in step order.  Declared intent: ``"overlapped"``."""
     return CommPlan("stagger", steps, transfer, compute, epilogue)
+
+
+def dispatch(
+    steps: int,
+    *,
+    transfer: Callable[[Any, int], Pending],
+    compute: Callable[[Any, Any, int], Any],
+    combine: Callable[[Any, int], Pending],
+    epilogue: Callable[[Any, Any], Any] | None = None,
+) -> CommPlan:
+    """Declare a double-buffered two-legged exchange schedule — the
+    expert-parallel MoE shape (``MPI_Ialltoallv`` out, expert compute,
+    ``MPI_Ialltoallv`` back, pipelined over expert groups):
+
+    * ``transfer(state, s)`` issues step ``s``'s dispatch leg (ships the
+      routed payload to its owner ranks) and returns the :class:`Pending`;
+    * ``compute(carry, arrived, s)`` runs on the *arrived* tiles — unlike
+      ring/halo, the compute stage consumes the completed transfer, so the
+      planner hides step ``s``'s dispatch behind step ``s-1``'s compute;
+    * ``combine(result, s)`` issues the return leg for step ``s``'s result;
+      its completion hides behind step ``s+1``'s compute;
+    * ``epilogue(done, state)`` receives the completed combine results in
+      step order.
+
+    With ``steps >= 2`` both legs of every step have independent sibling
+    compute (the other steps' math); with one step both chain — the
+    serialized negative control.  Declared intent: ``"overlapped"``."""
+    return CommPlan("dispatch", steps, transfer, compute, epilogue, combine)

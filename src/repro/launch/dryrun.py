@@ -441,6 +441,112 @@ def serve_dryrun(*, arch: str = "phi4-mini-3.8b", slots: int = 8,
     return out
 
 
+def moe_dryrun(*, batch: int = 4, seq: int = 8, d_model: int = 64,
+               d_ff: int = 128, n_experts: int = 8, top_k: int = 2,
+               grid: tuple[int, int] = (2, 4), routing: str = "balanced",
+               n_groups: int = 2, verbose: bool = True) -> dict:
+    """Dry-run the expert-parallel MoE dispatch
+    (:func:`repro.models.ffn.moe_expert_parallel`): lower + compile the
+    routed FFN on a (data, model) fake mesh and classify every collective.
+
+    The acceptance gate: with ``n_groups >= 2`` expert groups the
+    ``dispatch`` comm plan double-buffers both ragged all-to-all legs —
+    group g+1's dispatch and group g's combine complete behind group g's /
+    g+1's expert GEMMs — so **nothing serializes**, and the walker's wire /
+    valid all-to-all bytes must equal the analytic counts-table model
+    (:func:`repro.models.ffn.moe_comm_model`: wire = padded capacity
+    blocks, valid = the ``MPI_Alltoallv`` counts).  The same program with
+    ``n_groups=1`` is the negative control: one group leaves the dispatch
+    leg no sibling compute (router GEMM upstream, expert GEMM downstream),
+    so the walker must see it serialized.
+
+    ``routing="skewed"`` routes every token to rank 0's experts (one per
+    group, all other experts zero-count): zero split extents ride the wire
+    as pure padding, the valid fraction collapses, and the overlap verdict
+    must not change — the gate runs balanced AND skewed in CI.
+    """
+    from types import SimpleNamespace
+
+    from repro.core.compat import make_mesh
+    from repro.launch import hlo_walk
+    from repro.models import ffn
+    from repro.models.sharding import (make_recipe, ragged_expert_extents,
+                                       use_recipe)
+
+    E, k = n_experts, top_k
+    cfg = SimpleNamespace(n_heads=4, n_kv=2, head_dim=d_model // 4,
+                          d_model=d_model, d_ff=d_ff, vocab_padded=256,
+                          n_experts=E, family="moe")
+    mesh = make_mesh(grid, ("data", "model"))
+    D, R = grid
+    Tl = (batch // D) * (seq // R)
+    if routing == "balanced":
+        counts = ffn.moe_ep_counts(E, Tl, k, 1.25)
+    elif routing == "skewed":
+        # everything to rank 0's experts, one per group; zero-token experts
+        # everywhere else (zero split extents on ranks 1..R-1)
+        cap_e, _ = ragged_expert_extents(E, R)
+        step = max(1, cap_e // max(n_groups, 1))
+        hot = tuple(range(0, cap_e, step))[:n_groups]
+        counts = tuple(Tl if e in hot else 0 for e in range(E))
+    else:
+        raise ValueError(f"unknown routing {routing!r} (balanced | skewed)")
+
+    params = {
+        "router": jax.ShapeDtypeStruct((d_model, E), np.float32),
+        "w_gate": jax.ShapeDtypeStruct((E, d_model, d_ff), np.float32),
+        "w_up": jax.ShapeDtypeStruct((E, d_model, d_ff), np.float32),
+        "w_down": jax.ShapeDtypeStruct((E, d_ff, d_model), np.float32),
+    }
+    x = jax.ShapeDtypeStruct((batch, seq, d_model), np.float32)
+
+    out: dict = {"batch": batch, "seq": seq, "d_model": d_model, "d_ff": d_ff,
+                 "n_experts": E, "top_k": k, "grid": list(grid),
+                 "routing": routing, "counts": list(counts),
+                 "n_groups": n_groups}
+    for variant, ng in (("overlapped", n_groups), ("single", 1)):
+        recipe = make_recipe(cfg, mesh)
+        sched = ffn.moe_ep_schedule(E, R, counts, ng)
+        model = ffn.moe_comm_model(sched, d_model=d_model, itemsize=4)
+
+        def fwd(p, xv, _r=recipe, _ng=ng):
+            with use_recipe(_r):
+                # merge=False: y stays in (D, R, Tl, m) split form so the
+                # boundary reshard of the merge cannot pollute the a2a gate
+                y, aux = ffn.moe_expert_parallel(
+                    p, xv, n_experts=E, top_k=k, counts=counts, n_groups=_ng,
+                    merge=False)
+            return y, aux
+
+        with mesh:
+            compiled = jax.jit(fwd).lower(params, x).compile()
+        st = hlo_walk.analyze(compiled.as_text(),
+                              valid_fractions=model["valid_fractions"])
+        wire = st.coll_by_op.get("all-to-all", 0.0)
+        valid = st.coll_by_op_valid.get("all-to-all", 0.0)
+        out[variant] = {
+            "steps": len(sched.groups),
+            "collectives": len(st.collectives),
+            "all_to_alls": len(st.of_kind("all-to-all")),
+            "overlapped": st.collectives_overlapped(),
+            "serialized": st.collectives_serialized(),
+            "serialized_a2a": st.collectives_serialized("all-to-all"),
+            "exposed_bytes": st.exposed_collective_bytes(),
+            "hlo_wire_a2a_bytes": wire,
+            "hlo_valid_a2a_bytes": valid,
+            "model_wire_bytes": model["wire_bytes"],
+            "model_valid_bytes": model["valid_bytes"],
+            "wire_matches_model": wire == model["wire_bytes"],
+            "valid_matches_model": abs(valid - model["valid_bytes"]) < 1e-6,
+            "overlap_by_kind": st.overlap_by_kind(),
+            "plan": hlo_walk.plan_agreement(st, ffn.MOE_DISPATCH_PLAN_INTENT,
+                                            kind="all-to-all"),
+        }
+    if verbose:
+        print(json.dumps(out, indent=1))
+    return out
+
+
 def _mem_dict(mem):
     if mem is None:
         return {}
@@ -491,6 +597,18 @@ def plan_report(path: str, verbose: bool = True) -> int:
                 "exposed_bytes": cell["exposed_bytes"],
                 "overlap_by_kind": cell["overlap_by_kind"],
             })
+    for routing in ("balanced", "skewed"):
+        moe = moe_dryrun(routing=routing, verbose=False)
+        rows.append({
+            "program": f"moe_ep_dispatch_{routing}",
+            "variant": "double_buffered",
+            **moe["overlapped"]["plan"],
+            "exposed_bytes": moe["overlapped"]["exposed_bytes"],
+            "overlap_by_kind": moe["overlapped"]["overlap_by_kind"],
+            # single expert group = no sibling GEMM for the dispatch leg:
+            # the a2a must serialize there or the walker proves nothing here
+            "negative_control_serialized": moe["single"]["serialized_a2a"],
+        })
     serve = serve_dryrun(verbose=False)
     rows.append({
         "program": "serve_tp_decode",
@@ -573,6 +691,21 @@ def main() -> None:
     ap.add_argument("--serve-slots", type=int, default=8, help="batch slots for --serve")
     ap.add_argument("--serve-microbatches", type=int, default=2,
                     help="stagger depth for --serve (1 = negative control)")
+    ap.add_argument("--moe", action="store_true",
+                    help="expert-parallel MoE dispatch dry run: lower the "
+                         "ragged all-to-all dispatch/combine FFN and assert "
+                         "0 serialized collectives, plan/HLO agreement, and "
+                         "walker wire/valid a2a bytes == the counts-table "
+                         "model; n_groups=1 is the serialized negative "
+                         "control")
+    ap.add_argument("--moe-grid", default="2x4", help="data x model for --moe")
+    ap.add_argument("--moe-groups", type=int, default=2,
+                    help="expert groups (double-buffer depth) for --moe")
+    ap.add_argument("--moe-routing", default="both",
+                    choices=["balanced", "skewed", "both"],
+                    help="routing profile for --moe: balanced counts, skewed "
+                         "(all tokens to rank 0's experts, zero-token "
+                         "experts elsewhere), or both")
     ap.add_argument("--attn-impl", default=None, choices=["jnp", "interpret"],
                     help="attention kernel impl for the --sp-ring/--serve "
                          "gates: 'interpret' traces the Pallas kernels "
@@ -636,6 +769,22 @@ def main() -> None:
         # negative control: the unstaggered schedule must show the reductions
         # on the chain, or the gate is measuring walker blindness
         bad += 0 if rep["single"]["serialized"] > 0 else 1
+        raise SystemExit(1 if bad else 0)
+
+    if args.moe:
+        grid = tuple(int(x) for x in args.moe_grid.split("x"))
+        routings = (("balanced", "skewed") if args.moe_routing == "both"
+                    else (args.moe_routing,))
+        bad = 0
+        for routing in routings:
+            rep = moe_dryrun(grid=grid, routing=routing,
+                             n_groups=args.moe_groups)
+            ov, single = rep["overlapped"], rep["single"]
+            bad += ov["serialized"]
+            bad += 0 if ov["plan"]["agree"] else 1
+            bad += 0 if (ov["wire_matches_model"]
+                         and ov["valid_matches_model"]) else 1
+            bad += 0 if single["serialized_a2a"] > 0 else 1
         raise SystemExit(1 if bad else 0)
 
     os.makedirs(args.out, exist_ok=True)

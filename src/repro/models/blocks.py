@@ -66,7 +66,7 @@ def attn_block(p, x, cfg, *, cache=None, positions=None, new_counts=None, prefil
     if cfg.ffn_kind == "moe":
         f, aux = ffn_mod.moe_ffn(p["ffn"], rmsnorm(p["ln2"], x), n_experts=cfg.n_experts,
                                  top_k=cfg.moe_top_k, capacity_factor=cfg.moe_capacity_factor,
-                                 groups=cfg.moe_groups)
+                                 groups=cfg.moe_groups, dispatch=cfg.moe_dispatch)
     elif cfg.ffn_kind == "gelu":
         f = ffn_mod.gelu_mlp(p["ffn"], pin(rmsnorm(p["ln2"], x)))
     else:

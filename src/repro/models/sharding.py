@@ -47,13 +47,14 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import warnings
 from typing import Any, Mapping
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["Recipe", "make_recipe", "use_recipe", "shard_act", "current_recipe",
-           "ragged_seq_extents"]
+           "ragged_seq_extents", "ragged_expert_extents"]
 
 
 def ragged_seq_extents(S: int, R: int) -> tuple[int, tuple[int, ...]]:
@@ -73,6 +74,19 @@ def ragged_seq_extents(S: int, R: int) -> tuple[int, tuple[int, ...]]:
 
     cap = ceil_div(S, R)
     return cap, tuple(max(0, min(cap, S - r * cap)) for r in range(R))
+
+
+def ragged_expert_extents(E: int, R: int) -> tuple[int, tuple[int, ...]]:
+    """Ragged expert ownership over an R-rank model axis: ``(cap, extents)``.
+
+    Contiguous ceil-split of the expert table — rank ``r`` owns experts
+    ``[r*cap, min((r+1)*cap, E))`` — so ``E`` need NOT divide the axis:
+    trailing ranks own fewer (possibly zero) experts and their weight
+    slots are zero-padded.  This is the per-rank side of the expert-parallel
+    ``MPI_Alltoallv`` counts table: the dispatch leg's split extents for a
+    destination rank sum the token counts of exactly these experts.
+    """
+    return ragged_seq_extents(E, R)
 
 # priority for param-dim conflicts (earlier wins a contested mesh axis)
 PRIORITY = ["e", "v", "f", "h", "a", "i", "c", "g", "q", "k", "m", "l"]
@@ -183,6 +197,8 @@ def make_recipe(cfg, mesh: Mesh, *, attn_mode: str = "auto",
         "moe_buf": P(mp, None, None) if (cfg.n_experts and cfg.n_experts % max(msize, 1) == 0) else P(None, None, None),
         # grouped buffer (G, E, Cg, m): groups follow the batch/data axes
         "moe_buf_g": P(B, mp, None, None) if (cfg.n_experts and cfg.n_experts % max(msize, 1) == 0) else P(B, None, None, None),
+        # expert-parallel routed buffer (G2, Q, m): token shards over data+model
+        "moe_ep_buf": P(tuple(batch_axes) + (model_ax,) if model_ax else B, None, None),
         "moe_tok": P(B, None),
         # SSM states
         "state_rwkv": P(B, mp, None, None) if (cfg.n_heads % max(msize, 1) == 0) else P(B, None, None, mp),
@@ -203,6 +219,15 @@ def make_recipe(cfg, mesh: Mesh, *, attn_mode: str = "auto",
         act["hidden"] = P(B, mp, None)
         act["ffn_h"] = P(B, mp, None)
     act.update(act_overrides or {})
+    if cfg.n_experts and model_ax and msize > 1 and cfg.n_experts % msize != 0:
+        warnings.warn(
+            f"make_recipe: n_experts={cfg.n_experts} does not divide the model "
+            f"axis ({msize}); the 'moe_buf'/'moe_buf_g' recipe kinds fall back "
+            "to REPLICATED expert buffers (every rank scatters and computes the "
+            "full (E*C, m) table). Use moe_dispatch='ep' (ragged expert-parallel "
+            "dispatch, ragged_expert_extents) to shard experts anyway.",
+            stacklevel=2,
+        )
     return Recipe(mesh=mesh, bindings=bind, act_specs=act, attn_mode=attn_mode,
                   batch_axes=batch_axes, sp_ring=sp_ring)
 

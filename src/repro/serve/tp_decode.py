@@ -21,10 +21,12 @@ proves serializes nothing.  With ``microbatches=1`` the same program has no
 sibling compute and every reduction lands on the critical path — the
 negative control.
 
-Scope: the attention families with plain GQA blocks (``dense``/``audio``);
+Scope: the attention families with plain GQA blocks (``dense``/``audio``),
+with or without QKV biases (bias shards ride the head/KV-group shards and
+are added between each projection and rope, the oracle's pinned order);
 heads, KV groups, FFN hidden and vocab must divide the ``model`` axis, batch
-slots must divide ``data`` x ``microbatches``.  The engine falls back to the
-single-host path for everything else.
+slots must divide ``data`` x ``microbatches``.  MoE blocks are the one
+remaining exclusion — the engine falls back to the single-host path.
 """
 from __future__ import annotations
 
@@ -49,8 +51,8 @@ DECODE_TP_PLAN_INTENT = intent_of("stagger")
 def _check(cfg, mesh, slots: int, microbatches: int) -> None:
     if cfg.family not in ("dense", "audio"):
         raise ValueError(f"tp decode supports dense/audio families, not {cfg.family!r}")
-    if cfg.qkv_bias or cfg.n_experts:
-        raise ValueError("tp decode: qkv_bias / MoE blocks not supported")
+    if cfg.n_experts:
+        raise ValueError("tp decode: MoE blocks not supported")
     for name in ("data", "model"):
         if name not in mesh.shape:
             raise ValueError(f"tp decode needs a (data, model) mesh, missing {name!r}")
@@ -80,6 +82,11 @@ def tp_decode_specs(cfg, *, stacked: bool = True):
         "wv": P(*lead, None, "model", None),
         "wo": P(*lead, "model", None, None),
     }
+    if cfg.qkv_bias:
+        # biases ride the head/KV-group shards of their projections
+        attn["bq"] = P(*lead, "model", None)
+        attn["bk"] = P(*lead, "model", None)
+        attn["bv"] = P(*lead, "model", None)
     if cfg.ffn_kind == "gelu":
         ffn = {"w_in": P(*lead, None, "model"), "w_out": P(*lead, "model", None),
                "b_in": P(*lead, "model"), "b_out": P(*lead, None)}
@@ -180,16 +187,29 @@ def make_tp_decode_step(cfg, mesh, *, slots: int, microbatches: int = 2,
             wk = blocks["attn"]["wk"][l]
             wv = blocks["attn"]["wv"][l]
             wo = blocks["attn"]["wo"][l]
+            if cfg.qkv_bias:
+                bq = blocks["attn"]["bq"][l]
+                bk = blocks["attn"]["bk"][l]
+                bv = blocks["attn"]["bv"][l]
+            else:
+                bq = bk = bv = None
             new_k_l: list = [None] * mb
             new_v_l: list = [None] * mb
 
             def attn_compute(_c, _s, s, l=l, ln1=ln1, wq=wq, wk=wk, wv=wv, wo=wo,
-                             new_k_l=new_k_l, new_v_l=new_v_l):
+                             bq=bq, bk=bk, bv=bv, new_k_l=new_k_l, new_v_l=new_v_l):
                 xi = xs[s]
                 xn = _pin(rmsnorm(ln1, xi))
                 q = _pin(jnp.einsum("bsm,mhd->bhsd", xn, wq.astype(xi.dtype)))
                 k = _pin(jnp.einsum("bsm,mgd->bgsd", xn, wk.astype(xi.dtype)))
                 v = _pin(jnp.einsum("bsm,mgd->bgsd", xn, wv.astype(xi.dtype)))
+                if bq is not None:
+                    # local head/group shard of the bias, added between the
+                    # projection and rope — the oracle's pinned order
+                    # (models/attention.py gqa_attention)
+                    q = _pin(q + bq.astype(xi.dtype)[None, :, None, :])
+                    k = _pin(k + bk.astype(xi.dtype)[None, :, None, :])
+                    v = _pin(v + bv.astype(xi.dtype)[None, :, None, :])
                 cos, sin = rope_angles(p_mb[s], cfg.head_dim, cfg.rope_theta)
                 q = _pin(apply_rope(q, cos, sin))
                 k = _pin(apply_rope(k, cos, sin))

@@ -503,3 +503,45 @@ print('OK')
 """
     )
     assert "OK" in out
+
+
+def test_moe_ep_dispatch_gate(distributed):
+    """ISSUE 9 acceptance: the expert-parallel MoE FFN compiles to 0
+    serialized collectives — both ragged a2a legs (token dispatch + gated
+    combine) complete behind sibling expert GEMMs under the double-buffered
+    dispatch plan — with walker wire/valid a2a bytes equal to the analytic
+    counts-table model, under balanced AND skewed routing (zero-token
+    experts riding as zero split extents).  One expert group leaves the
+    dispatch leg no sibling compute: the negative control must serialize."""
+    out = distributed(
+        """
+from repro.launch.dryrun import moe_dryrun
+from repro.models.ffn import MOE_DISPATCH_PLAN_INTENT
+
+assert MOE_DISPATCH_PLAN_INTENT == "overlapped"
+reps = {}
+for routing in ("balanced", "skewed"):
+    rep = moe_dryrun(routing=routing, verbose=False)
+    reps[routing] = rep
+    ov = rep["overlapped"]
+    assert ov["serialized"] == 0, (routing, ov)
+    assert ov["plan"]["agree"] and ov["plan"]["proven"] == "overlapped", (routing, ov)
+    # one dispatch + one combine instruction per plan step, all overlapped
+    assert ov["all_to_alls"] == 2 * ov["steps"], (routing, ov)
+    # the wire is the padded capacity blocks, the valid payload is the
+    # MPI_Alltoallv counts table — both must match the walker's accounting
+    assert ov["wire_matches_model"] and ov["valid_matches_model"], (routing, ov)
+    assert ov["exposed_bytes"] == 0.0, (routing, ov)
+    single = rep["single"]
+    assert single["serialized_a2a"] > 0, (routing, single)
+    assert not single["plan"]["agree"]
+# skewed routing concentrates tokens on rank 0's experts: the zero-count
+# experts pad the wire, so valid bytes drop strictly below wire bytes
+sk = reps["skewed"]["overlapped"]
+assert sk["hlo_valid_a2a_bytes"] < sk["hlo_wire_a2a_bytes"], sk
+bal = reps["balanced"]["overlapped"]
+assert sk["hlo_wire_a2a_bytes"] > bal["hlo_wire_a2a_bytes"]  # padding costs wire
+print('OK')
+"""
+    )
+    assert "OK" in out

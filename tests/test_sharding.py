@@ -94,6 +94,44 @@ print('OK')
     assert "OK" in out
 
 
+def test_moe_replicated_fallback_warns(distributed):
+    """When ``n_experts`` does not divide the model axis, the
+    ``moe_buf``/``moe_buf_g`` recipe kinds silently replicate the expert
+    scatter buffers — ``make_recipe`` must say so out loud (naming the
+    recipe kinds and the expert-parallel escape hatch), and stay silent
+    when the experts divide cleanly."""
+    out = distributed(
+        """
+import dataclasses, warnings
+from repro import configs
+from repro.core.compat import make_mesh
+from repro.models.sharding import make_recipe
+
+mesh = make_mesh((2, 4), ('data', 'model'))
+cfg = configs.get('phi3.5-moe-42b-a6.6b', smoke=True)
+
+# 6 experts % model=4 != 0 -> replicated fallback, must warn
+bad = dataclasses.replace(cfg, n_experts=6)
+with warnings.catch_warnings(record=True) as w:
+    warnings.simplefilter('always')
+    make_recipe(bad, mesh)
+msgs = [str(x.message) for x in w]
+hits = [m for m in msgs if 'moe_buf' in m and 'REPLICATED' in m]
+assert hits, msgs
+assert "moe_dispatch='ep'" in hits[0], hits[0]
+
+# 8 % 4 == 0 -> sharded buffers, no warning
+ok = dataclasses.replace(cfg, n_experts=8)
+with warnings.catch_warnings(record=True) as w2:
+    warnings.simplefilter('always')
+    make_recipe(ok, mesh)
+assert not [m for m in (str(x.message) for x in w2) if 'moe_buf' in m]
+print('OK')
+"""
+    )
+    assert "OK" in out
+
+
 @pytest.mark.slow  # 8-device train subprocess
 def test_sharded_train_step_matches_single_device(distributed):
     """The whole point of SPMD: distributed step == single-device step."""

@@ -244,6 +244,74 @@ print('OK')
     assert "OK" in out
 
 
+def test_all_to_allv_adversarial_imbalance(distributed):
+    """MoE-routing shaped adversarial counts tables through the ragged
+    all-to-all: ALL rows to one destination (every other split extent zero),
+    zero-count holes between live destinations, and counts at exact
+    capacity (max == every count, zero padding).  Laws: the inverse a2a is a
+    bit-identical round trip (tiles AND extents), padding never leaks into
+    logical tiles, and blocking == start().wait()."""
+    out = distributed(
+        _PRELUDE
+        + """
+@settings(max_examples=6, deadline=None)
+@given(
+    st.sampled_from([2, 4, 8]),
+    st.sampled_from(['one_dest', 'zero_holes', 'exact_cap']),
+    st.sampled_from(LAYOUT_KINDS),
+    st.integers(0, 10**9),
+)
+def prop(R, profile, kind, seed):
+    nj = R + 3
+    cap_j, ej = ragged_split(nj, R)
+    if profile == 'one_dest':
+        ni = 2 * R + 1
+        ei = (ni,) + (0,) * (R - 1)
+    elif profile == 'zero_holes':
+        live = (R + 1) // 2
+        per = 3
+        ni = live * per
+        ei = tuple(per if r % 2 == 0 else 0 for r in range(R))[:R]
+        ei = ei + (0,) * (R - len(ei))
+    else:  # exact capacity: every count == the block capacity, no padding
+        ni = 3 * R
+        ei = (3,) * R
+    cap_i = max(ei)
+    dt = comm(R)
+    rl = root_layout('row', ni, nj)
+    # 1-based values: a zero in a logical tile can only be leaked padding
+    data = jnp.arange(1, ni * nj + 1, dtype=jnp.float32).reshape(rl.shape)
+    in_tile = tile_layout(kind, ni, cap_j)
+    db = scatterv_bag(bag(rl, data), in_tile, dt, {'R': ('j', ej)})
+    out_tile = (scalar(np.float32) ^ vector('j', nj) ^ vector('i', cap_i)
+                if kind == 'row' else
+                scalar(np.float32) ^ vector('i', cap_i) ^ vector('j', nj))
+    res = all_to_allv_bag(db, out_tile, split_dim='i', concat_dim='j',
+                          split_extents=ei)
+    # pad/mask invariance: every nonzero element lives in the valid region
+    for r in range(R):
+        raw = np.asarray(res.data[r])
+        valid = np.asarray(res.tile(r).data)
+        assert valid.size == nj * ei[r], (profile, R, r)
+        assert np.count_nonzero(raw) == np.count_nonzero(valid), (profile, R, r)
+        if profile == 'exact_cap':
+            assert raw.size == valid.size  # no padding at exact capacity
+    # round trip: inverse split/concat is bit-identical, tiles AND extents
+    back = all_to_allv_bag(res, in_tile, split_dim='j', concat_dim='i',
+                           split_extents=ej)
+    assert back.extents == db.extents, (profile, R, kind)
+    assert eq(back.data, db.data), (profile, R, kind)
+    # blocking == start().wait() (shared issue path)
+    assert eq(res.data, all_to_allv_start(db, out_tile, split_dim='i',
+                                          concat_dim='j', split_extents=ei).wait().data)
+
+prop()
+print('OK')
+"""
+    )
+    assert "OK" in out
+
+
 def test_wait_all_order_independence_with_v_collectives(distributed):
     """MPI_Waitall semantics over a MIX of dense and ragged requests: an
     all_gatherv, an all_to_allv, a ragged ring_shift, and a dense all_reduce

@@ -13,9 +13,9 @@ import sys, os, time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-if any(a.startswith("--moe") for a in sys.argv):
-    # the expert-parallel MoE rows lower a real (data, model) mesh program —
-    # fake the devices before jax initializes
+if any(a.startswith(("--moe", "--train")) for a in sys.argv):
+    # the expert-parallel MoE and ZeRO train rows lower real fake-mesh
+    # programs — fake the devices before jax initializes
     os.environ["XLA_FLAGS"] = (
         os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
     ).strip()
@@ -186,6 +186,72 @@ def moe_dispatch_rows() -> list[dict]:
     ]
 
 
+def train_step_rows() -> list[dict]:
+    """GSPMD baseline vs the explicit ZeRO-2 step on a fake 8-way data mesh:
+    tokens/sec wall-clock (CPU smoke shapes) plus the statically proven
+    exposed collective bytes and the analytic wire/valid bytes of each
+    schedule — the nightly evidence that the declared bucket plan hides its
+    reduce-scatters/all-gathers while the baseline makes no such claim."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.compat import make_mesh
+    from repro.launch import hlo_walk
+    from repro.train.buckets import zero_comm_model
+    from repro.train.optimizer import init_zero_opt_state
+    from repro.train.trainer import make_zero_train_step, zero_train_buckets
+
+    arch = "phi4-mini-3.8b"
+    cfg = configs.get(arch, smoke=True)
+    R = 8
+    mesh = make_mesh((R,), ("data",))
+    cell = ShapeCell("bench", seq_len=64, global_batch=16, kind="train")
+    tokens = cell.global_batch * cell.seq_len
+    ocfg = OptConfig(warmup_steps=1)
+    params = lm.init_model(cfg, jax.random.PRNGKey(0))
+    params = jax.tree.map(
+        lambda x: jax.device_put(x, NamedSharding(mesh, P())), params)
+    batch = jax.tree.map(jnp.asarray, make_batch(cfg, cell, 0, DataConfig()))
+    batch = jax.tree.map(
+        lambda x: jax.device_put(x, NamedSharding(mesh, P("data"))), batch)
+
+    rows = []
+
+    opt = init_opt_state(params, ocfg)
+    base = jax.jit(make_train_step(cfg, None, ocfg))
+    t_base = _time(lambda: base(params, opt, batch)[2]["loss"])
+    st = hlo_walk.analyze(base.lower(params, opt, batch).compile().as_text())
+    rows.append({
+        "mode": "gspmd_baseline", "arch": arch, "grid": f"{R}x1",
+        "tokens_per_s": tokens / t_base, "us_per_call": t_base * 1e6,
+        "exposed_bytes": st.exposed_collective_bytes(),
+        "serialized": st.collectives_serialized(),
+        "model_wire_bytes": None, "model_valid_bytes": None,
+    })
+
+    bucket_bytes = 64 << 10
+    bkts = zero_train_buckets(cfg, bucket_bytes=bucket_bytes, ranks=R)
+    model = zero_comm_model(bkts)
+    zopt = init_zero_opt_state(params, bkts, ocfg)
+    shard = lambda t: tuple(
+        jax.device_put(x, NamedSharding(mesh, P("data"))) for x in t)
+    zopt = zopt._replace(mu=shard(zopt.mu), nu=shard(zopt.nu))
+    zstep = jax.jit(make_zero_train_step(cfg, mesh, ocfg,
+                                         bucket_bytes=bucket_bytes))
+    t_zero = _time(lambda: zstep(params, zopt, batch)[2]["loss"])
+    st = hlo_walk.analyze(zstep.lower(params, zopt, batch).compile().as_text(),
+                          valid_fractions=model["valid_fractions"])
+    rows.append({
+        "mode": "zero_explicit", "arch": arch, "grid": f"{R}x1",
+        "tokens_per_s": tokens / t_zero, "us_per_call": t_zero * 1e6,
+        "exposed_bytes": st.exposed_collective_bytes(),
+        "serialized": st.collectives_serialized(),
+        "model_wire_bytes": model["wire_bytes"],
+        "model_valid_bytes": model["valid_bytes"],
+        "n_buckets": len(bkts),
+    })
+    return rows
+
+
 if __name__ == "__main__":
     import argparse, json
 
@@ -199,7 +265,27 @@ if __name__ == "__main__":
                          "rows to this JSON path (nightly artifact)")
     ap.add_argument("--moe-only", action="store_true",
                     help="run only the MoE dispatch rows (fast artifact run)")
+    ap.add_argument("--train-json", default=None,
+                    help="write the GSPMD-vs-ZeRO train-step rows to this "
+                         "JSON path (nightly train_step_bench.json artifact)")
+    ap.add_argument("--train-only", action="store_true",
+                    help="run only the train-step rows (fast artifact run)")
     args = ap.parse_args()
+
+    train_csv = "mode,arch,grid,tokens_per_s,exposed_bytes,serialized,model_wire_bytes,model_valid_bytes"
+
+    def train_csv_line(r):
+        return (f"{r['mode']},{r['arch']},{r['grid']},{r['tokens_per_s']:.1f},"
+                f"{r['exposed_bytes']},{r['serialized']},"
+                f"{r['model_wire_bytes']},{r['model_valid_bytes']}")
+
+    if args.train_only:
+        rows = train_step_rows()
+        print("\n".join([train_csv] + [train_csv_line(r) for r in rows]))
+        if args.train_json:
+            with open(args.train_json, "w") as f:
+                json.dump({"rows": rows, "backend": jax.default_backend()}, f, indent=2)
+        sys.exit(0)
 
     if args.moe_only:
         moe = moe_dispatch_rows()
@@ -222,6 +308,9 @@ if __name__ == "__main__":
         lines += ["", "mode,shape,grid,tokens_per_s,model_wire_bytes,model_valid_bytes"]
         lines += [f"{r['mode']},{r['shape']},{r['grid']},{r['tokens_per_s']:.1f},"
                   f"{r['model_wire_bytes']},{r['model_valid_bytes']}" for r in moe]
+    train_rows = train_step_rows() if args.train_json else None
+    if train_rows:
+        lines += ["", train_csv] + [train_csv_line(r) for r in train_rows]
     print("\n".join(lines).lstrip("\n"))
     if args.attn_kernel_json:
         with open(args.attn_kernel_json, "w") as f:
@@ -229,3 +318,6 @@ if __name__ == "__main__":
     if args.moe_dispatch_json and moe:
         with open(args.moe_dispatch_json, "w") as f:
             json.dump({"rows": moe, "backend": jax.default_backend()}, f, indent=2)
+    if args.train_json and train_rows:
+        with open(args.train_json, "w") as f:
+            json.dump({"rows": train_rows, "backend": jax.default_backend()}, f, indent=2)

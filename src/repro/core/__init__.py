@@ -149,6 +149,39 @@ schedule                :func:`dispatch` comm plan: issue group *g+1*'s
                         gates 0 serialized; one group = the serialized
                         negative control)
 ======================  =====================================================
+
+Training comm
+-------------
+The explicit ZeRO-2 train step (:func:`repro.train.trainer.
+make_zero_train_step`) is the layer's flat-shard v-collective showcase:
+gradients pack into dtype-homogeneous buckets whose counts/displacements
+tables span the flattened param pytree (:mod:`repro.train.buckets`), and
+every wire leg rides the :func:`bucket` comm plan.
+
+======================  =====================================================
+Training phase          MPI analogue (repro.core construct)
+======================  =====================================================
+grad bucketing          counts/displacements over the flat param space —
+                        the ``MPI_Type_indexed`` tables, built once from
+                        the abstract params (no wire traffic)
+bucket grad reduce      ``MPI_Ireduce_scatter``
+                        (:func:`shard_reduce_scatterv_start`): each bucket's
+                        flat sum scatters into per-rank capacity shards the
+                        moment the backward produces it; sibling buckets'
+                        norm/update math hides the wire (``dryrun --train``
+                        gates 0 serialized; the whole-model single bucket is
+                        the serialized negative control)
+grad-norm clip          ``MPI_Iallreduce`` of the per-shard squared-norm
+                        partial sums — one scalar on the wire regardless of
+                        bucket count
+sharded AdamW           :func:`rank_map` discipline over the 1/R optimizer
+                        shard: moments live as flat ``P("data")`` buffers
+                        (ZeRO partitioning), each rank updates only its
+                        capacity slice
+param prefetch          ``MPI_Iallgatherv`` (:func:`shard_all_gatherv_start`):
+                        updated shards regather into full params off the
+                        compute chain — the prefetch for the next forward
+======================  =====================================================
 """
 from .compat import make_mesh, shard_map
 from .dims import LayoutError, ceil_div, common_refinement, ragged_split
@@ -210,8 +243,11 @@ from .collectives import (
     dist_full,
     dist_sharding,
     rank_map,
+    shard_all_gatherv_start,
+    shard_reduce_scatterv_start,
 )
-from .plan import CommPlan, dispatch, halo, intent_of, pipeline, ring, stagger
+from .plan import (CommPlan, bucket, dispatch, halo, intent_of, pipeline,
+                   ring, stagger)
 from .p2p import (
     PendingTile,
     permute,
@@ -293,6 +329,8 @@ __all__ = [
     "dist_full",
     "dist_sharding",
     "rank_map",
+    "shard_all_gatherv_start",
+    "shard_reduce_scatterv_start",
     "DistBag",
     "Pending",
     "wait_all",
@@ -302,6 +340,7 @@ __all__ = [
     "pipeline",
     "stagger",
     "dispatch",
+    "bucket",
     "intent_of",
     "send_recv",
     "permute",

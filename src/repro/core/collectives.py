@@ -62,6 +62,11 @@ MPI                      repro.core
 ``MPI_Alltoallv``        :func:`all_to_allv_bag`
 ``MPI_Ialltoallv``       :func:`all_to_allv_start`
 ``Reduce_scatter`` (v)   :func:`reduce_scatterv_bag` / ``_start``
+``MPI_Ireduce_scatter``  :func:`shard_reduce_scatterv_start` (inside
+(flat shard form)        ``shard_map``: flat padded buffer + recvcounts
+                         extents — the ZeRO gradient-bucket leg)
+``MPI_Iallgatherv``      :func:`shard_all_gatherv_start` (inside
+(flat shard form)        ``shard_map``: the param-prefetch return leg)
 =======================  ====================================================
 
 Every v-collective shares the ``_issue_*``/:class:`Pending` path with the
@@ -112,6 +117,8 @@ __all__ = [
     "all_to_allv_start",
     "reduce_scatterv_bag",
     "reduce_scatterv_start",
+    "shard_reduce_scatterv_start",
+    "shard_all_gatherv_start",
     "reduce_identity",
     "dist_full",
     "dist_sharding",
@@ -1750,3 +1757,59 @@ def rank_map(
         shard_fn, mesh=dt.mesh, in_specs=in_specs, out_specs=out_spec
     )(*[db.data for db in dist_bags])
     return DistBag(mapped, out_layout, dt, rank_dims, extents=out_extents)
+
+
+def _check_flat_extents(n: int, extents: Sequence[int], what: str) -> int:
+    """Validate a flat recvcounts table against an ``R * cap`` buffer; returns
+    the per-rank capacity."""
+    R = len(extents)
+    if R == 0 or n % R:
+        raise LayoutError(
+            f"{what}: flat size {n} must be R * cap for R={R} ranks"
+        )
+    cap = n // R
+    for r, e in enumerate(extents):
+        if not 0 <= int(e) <= cap:
+            raise LayoutError(
+                f"{what}: extents[{r}]={e} outside [0, cap={cap}]"
+            )
+    return cap
+
+
+def shard_reduce_scatterv_start(x, axis_name: str, *, extents: Sequence[int]) -> Pending:
+    """Inside-``shard_map`` ``MPI_Ireduce_scatter`` over a *flat padded*
+    buffer: reduce the per-rank ``(R * cap,)`` partials over ``axis_name``
+    and hand rank ``r`` its own ``(cap,)`` slice, of which the leading
+    ``extents[r]`` elements are valid payload (the ``recvcounts`` table —
+    :func:`repro.models.sharding.ragged_grad_extents` builds it from a
+    gradient bucket's element count).  The capacity-pad tail is zeros by
+    construction (:func:`repro.train.buckets.pack_bucket`), so it is inert
+    under the sum and is wire-vs-valid accounted by the walker
+    (``dryrun --train``), exactly like the ragged-SUMMA panels.
+
+    Returns the :class:`Pending`; blocking = ``.wait()`` by construction.
+    The ZeRO train step issues one of these per gradient bucket — every
+    bucket in flight before any wait (:func:`repro.core.plan.bucket`)."""
+    def rs(a):
+        _check_flat_extents(a.shape[0], extents, "shard_reduce_scatterv_start")
+        return jax.lax.psum_scatter(a, axis_name, scatter_dimension=0, tiled=True)
+
+    return Pending(jax.tree_util.tree_map(rs, x), op="reduce_scatterv")
+
+
+def shard_all_gatherv_start(x, axis_name: str, *, extents: Sequence[int]) -> Pending:
+    """Inside-``shard_map`` ``MPI_Iallgatherv`` over flat capacity shards:
+    concatenate every rank's ``(cap,)`` shard in rank order into the full
+    ``(R * cap,)`` buffer, of which rank ``r``'s slice carries
+    ``extents[r]`` valid elements (counts; displacements are the ``r * cap``
+    capacity offsets).  The ZeRO train step's param-prefetch return leg:
+    each updated 1/R param shard is regathered ahead of the next forward
+    (:func:`repro.core.plan.bucket`'s combine stage).
+
+    Returns the :class:`Pending`; blocking = ``.wait()`` by construction."""
+    def ag(a):
+        R = len(extents)
+        _check_flat_extents(a.shape[0] * R, extents, "shard_all_gatherv_start")
+        return jax.lax.all_gather(a, axis_name, axis=0, tiled=True)
+
+    return Pending(jax.tree_util.tree_map(ag, x), op="all_gatherv")

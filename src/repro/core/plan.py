@@ -78,11 +78,33 @@ Stage signatures
 ``epilogue(carry, state) -> result``
     Optional final stage (e.g. the SUMMA reduce-scatter); receives the
     final carry and the final state.  Defaults to returning ``carry``.
-``combine(result, step) -> Pending`` (``dispatch`` plans only)
+``combine(result, step) -> Pending`` (``dispatch``/``bucket`` plans only)
     Issue the *return* leg for step ``step``'s compute result.  A
     ``dispatch`` plan's compute consumes the completed transfer (the
     arrived tiles), so the overlap comes from pipelining across steps
     rather than within one step — see :func:`dispatch`.
+``reduce(arrived) -> Any`` (``bucket`` plans only)
+    Cross-step barrier between the transfers' completion and the per-step
+    computes: receives the list of arrived results in step order and
+    returns a global value every compute sees (e.g. the global grad-norm
+    clip scale of a ZeRO train step) — see :func:`bucket`.
+
+The ``bucket`` kind (ZeRO-style training comm)
+----------------------------------------------
+:func:`bucket` declares the ZeRO-2 gradient schedule the explicit train
+step (:func:`repro.train.trainer.make_zero_train_step`) runs: step *s* is
+one dtype-homogeneous gradient bucket, ``transfer`` issues its
+``MPI_Ireduce_scatter`` (every bucket's reduction in flight at once — the
+backward's products drain into the wire as they appear), ``reduce`` is the
+one global stage (the grad-norm clip scale, a cross-bucket barrier),
+``compute`` is the shard-local AdamW update of bucket *s*'s 1/R param
+shard, and ``combine`` issues the updated shard's ``MPI_Iallgatherv``
+prefetch.  Each bucket's reduction completes behind the *sibling* buckets'
+norm/update math, so with two or more buckets no reduce-scatter sits on
+the compute chain (``dryrun --train`` gates 0 serialized; one bucket = the
+serialized negative control).  Declared intent: ``"overlapped"``; the
+blocking interpretation starts+waits each leg back-to-back through the
+same issue path, so it is bit-identical by construction.
 """
 from __future__ import annotations
 
@@ -91,7 +113,8 @@ from typing import Any, Callable
 
 from .request import Pending
 
-__all__ = ["CommPlan", "ring", "halo", "pipeline", "stagger", "dispatch", "intent_of"]
+__all__ = ["CommPlan", "ring", "halo", "pipeline", "stagger", "dispatch",
+           "bucket", "intent_of"]
 
 _INTENTS = {
     "ring": "overlapped",
@@ -99,6 +122,7 @@ _INTENTS = {
     "pipeline": "serialized",
     "stagger": "overlapped",
     "dispatch": "overlapped",
+    "bucket": "overlapped",
 }
 
 
@@ -125,8 +149,10 @@ class CommPlan:
     transfer: Callable[[Any, int], Pending]
     compute: Callable[[Any, Any, int], Any]
     epilogue: Callable[[Any, Any], Any] | None = None
-    # dispatch plans only: issue the return leg for one step's compute result
+    # dispatch/bucket plans only: issue the return leg for one step's result
     combine: Callable[[Any, int], Pending] | None = None
+    # bucket plans only: cross-step barrier between arrivals and computes
+    reduce: Callable[[list], Any] | None = None
 
     def __post_init__(self):
         intent_of(self.kind)  # validates the kind
@@ -134,6 +160,10 @@ class CommPlan:
             raise ValueError(f"plan needs at least one step, got {self.steps}")
         if self.kind == "dispatch" and self.combine is None:
             raise ValueError("dispatch plan needs a combine stage (the return leg)")
+        if self.kind == "bucket" and self.combine is None:
+            raise ValueError("bucket plan needs a combine stage (the param all-gather)")
+        if self.reduce is not None and self.kind != "bucket":
+            raise ValueError(f"reduce stage is bucket-plan only, not {self.kind!r}")
 
     @property
     def intent(self) -> str:
@@ -191,6 +221,35 @@ class CommPlan:
             else:
                 done = [
                     self._issue(self.compute(carry, state, s), s).wait()
+                    for s in range(self.steps)
+                ]
+            return self._finish(done, state)
+        if self.kind == "bucket":
+            # ZeRO gradient schedule (see module docstring): issue EVERY
+            # bucket's reduce-scatter up front (the whole backward's grads in
+            # flight at once), complete them, run the one cross-bucket
+            # ``reduce`` stage (the global clip scale — the only barrier),
+            # then fold each bucket's shard-local update and issue its
+            # all-gather return leg; every wait is a pure completion point
+            # (optimization barrier), so the blocking form — start+wait
+            # back-to-back per leg, same issue path — is bit-identical.
+            # Overlap shape: bucket s's reduce-scatter completes behind the
+            # SIBLING buckets' reduce-stage math (its own norm term is
+            # downstream); its all-gather has no downstream compute at all.
+            if double_buffer:
+                pends = [self._issue(state, s) for s in range(self.steps)]
+                arrived = [p.wait() for p in pends]
+                gval = self.reduce(arrived) if self.reduce else None
+                results = [self.compute(gval, arrived[s], s)
+                           for s in range(self.steps)]
+                combines = [self._issue_combine(results[s], s)
+                            for s in range(self.steps)]
+                done = [c.wait() for c in combines]
+            else:
+                arrived = [self._issue(state, s).wait() for s in range(self.steps)]
+                gval = self.reduce(arrived) if self.reduce else None
+                done = [
+                    self._issue_combine(self.compute(gval, arrived[s], s), s).wait()
                     for s in range(self.steps)
                 ]
             return self._finish(done, state)
@@ -338,3 +397,39 @@ def dispatch(
     compute (the other steps' math); with one step both chain — the
     serialized negative control.  Declared intent: ``"overlapped"``."""
     return CommPlan("dispatch", steps, transfer, compute, epilogue, combine)
+
+
+def bucket(
+    steps: int,
+    *,
+    transfer: Callable[[Any, int], Pending],
+    reduce: Callable[[list], Any],
+    compute: Callable[[Any, Any, int], Any],
+    combine: Callable[[Any, int], Pending],
+    epilogue: Callable[[Any, Any], Any] | None = None,
+) -> CommPlan:
+    """Declare the ZeRO-2 bucketed gradient schedule — one step per
+    gradient bucket (``MPI_Ireduce_scatter`` out, shard-local optimizer
+    math, ``MPI_Iallgatherv`` back):
+
+    * ``transfer(state, s)`` issues bucket ``s``'s gradient reduce-scatter
+      and returns the :class:`Pending` — all buckets go into flight before
+      any wait, so the reductions drain behind each other's downstream math;
+    * ``reduce(arrived)`` is the one cross-bucket barrier: it sees every
+      bucket's reduced shard (in step order) and returns the global value
+      the updates share (the grad-norm clip scale);
+    * ``compute(gval, arrived_s, s)`` runs bucket ``s``'s shard-local
+      update (AdamW on the 1/R optimizer shard) and returns the updated
+      param shard;
+    * ``combine(result, s)`` issues the updated shard's all-gather
+      (the next forward's param prefetch); completion hides behind the
+      sibling buckets' update math and the epilogue's unpacking;
+    * ``epilogue(done, state)`` receives the gathered full params in step
+      order.
+
+    With ``steps >= 2`` every reduce-scatter has sibling reduce-stage
+    compute independent of it; with one bucket its own norm term is the
+    only downstream compute and the reduction chains — the serialized
+    negative control ``dryrun --train`` checks.  Declared intent:
+    ``"overlapped"``."""
+    return CommPlan("bucket", steps, transfer, compute, epilogue, combine, reduce)

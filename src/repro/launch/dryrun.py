@@ -25,6 +25,8 @@ Usage:
   python -m repro.launch.dryrun --summa-gemm   # SUMMA ring: 0 serialized gate
   python -m repro.launch.dryrun --sp-ring      # ring attention: same gate
   python -m repro.launch.dryrun --serve        # serving TP decode: same gate
+  python -m repro.launch.dryrun --train        # ZeRO train step: 0 serialized
+                                               # reduce-scatter/all-gather gate
 
 The program gates (--summa-gemm / --uneven / --sp-ring / --serve) also
 assert *plan/HLO agreement*: each program's declared comm-plan intent
@@ -547,6 +549,121 @@ def moe_dryrun(*, batch: int = 4, seq: int = 8, d_model: int = 64,
     return out
 
 
+def train_dryrun(*, arch: str = "phi4-mini-3.8b", ranks: int = 8,
+                 seq: int = 64, batch: int = 16, bucket_kb: int = 64,
+                 compress: str = "none", microbatches: int = 1,
+                 verbose: bool = True) -> dict:
+    """Dry-run the explicit ZeRO-2 train step
+    (:func:`repro.train.trainer.make_zero_train_step`): lower + compile one
+    bucketed fwd+bwd+AdamW step on a fake ``data`` mesh and classify every
+    collective of every kind.
+
+    The acceptance gate: with multiple gradient buckets **nothing
+    serializes** among the plan's reduce-scatters and all-gathers — each
+    bucket's ``MPI_Ireduce_scatter`` completes behind the sibling buckets'
+    norm/update math and every param ``MPI_Iallgatherv`` prefetch is
+    terminal (no downstream compute) — and the declared ``bucket`` plan
+    intent must agree with the proven HLO verdict, kind-scoped to both
+    legs.  The walker's wire bytes must equal the analytic ZeRO comm model
+    (:func:`repro.train.buckets.zero_comm_model`: RS moves one capacity
+    shard per bucket, AG the full padded flat) and its valid bytes the
+    pad-discounted model.
+
+    The same program with ``bucket_kb`` large enough to hold the whole
+    model in ONE bucket is the negative control: a single reduce-scatter
+    has the backward upstream, its own norm dot downstream, and no sibling
+    compute, so the walker must see it serialized — proving the gate
+    measures the bucketed schedule, not walker blindness.
+
+    ``compress="int8"`` quantizes each reduced bucket shard (error-feedback
+    residual): pure elementwise work on the arrived shards, so the overlap
+    verdict and the byte model must not change — the gate runs both in CI.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs.base import ShapeCell
+    from repro.core.compat import make_mesh
+    from repro.launch import hlo_walk
+    from repro.train.buckets import zero_comm_model
+    from repro.train.optimizer import init_zero_opt_state
+    from repro.train.trainer import (ZERO_TRAIN_PLAN_INTENT,
+                                     make_zero_train_step, zero_train_buckets)
+
+    cfg = configs.get(arch, smoke=True)
+    mesh = make_mesh((ranks,), ("data",))
+    shape = ShapeCell("train_gate", seq_len=seq, global_batch=batch, kind="train")
+    ocfg = OptConfig(compress=compress)
+    params_abs = lm.abstract_model(cfg)
+    batch_abs = batch_specs(cfg, shape)
+
+    def _sh(tree, spec):
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                           sharding=NamedSharding(mesh, spec)),
+            tree,
+        )
+
+    def lower(bucket_bytes, db):
+        bkts = zero_train_buckets(cfg, bucket_bytes=bucket_bytes, ranks=ranks)
+        opt_abs = init_zero_opt_state(params_abs, bkts, ocfg)
+        opt_abs = opt_abs._replace(
+            step=jax.ShapeDtypeStruct((), np.int32,
+                                      sharding=NamedSharding(mesh, P())),
+            mu=_sh(opt_abs.mu, P("data")),
+            nu=_sh(opt_abs.nu, P("data")),
+            err=_sh(opt_abs.err, P("data")),
+        )
+        step = make_zero_train_step(cfg, mesh, ocfg, microbatches=microbatches,
+                                    bucket_bytes=bucket_bytes, double_buffer=db)
+        hlo = jax.jit(step).lower(
+            _sh(params_abs, P()), opt_abs, _sh(batch_abs, P("data"))
+        ).compile().as_text()
+        model = zero_comm_model(bkts)
+        st = hlo_walk.analyze(hlo, valid_fractions=model["valid_fractions"])
+        rs_wire = sum(b for op, b in st.coll_by_op.items() if "reduce-scatter" in op)
+        ag_wire = sum(b for op, b in st.coll_by_op.items() if "all-gather" in op)
+        rs_valid = sum(b for op, b in st.coll_by_op_valid.items() if "reduce-scatter" in op)
+        ag_valid = sum(b for op, b in st.coll_by_op_valid.items() if "all-gather" in op)
+        return {
+            "n_buckets": len(bkts),
+            "collectives": len(st.collectives),
+            "overlapped": st.collectives_overlapped(),
+            "serialized": st.collectives_serialized(),
+            "serialized_rs": st.collectives_serialized("reduce-scatter"),
+            "serialized_ag": st.collectives_serialized("all-gather"),
+            "exposed_bytes": st.exposed_collective_bytes(),
+            "hlo_wire_rs_bytes": rs_wire,
+            "hlo_wire_ag_bytes": ag_wire,
+            "hlo_valid_rs_bytes": rs_valid,
+            "hlo_valid_ag_bytes": ag_valid,
+            "model": {k: model[k] for k in
+                      ("n_buckets", "param_elems", "padded_elems",
+                       "rs_wire_bytes", "rs_valid_bytes", "ag_wire_bytes",
+                       "ag_valid_bytes", "wire_bytes", "valid_bytes")},
+            "wire_matches_model": (rs_wire == model["rs_wire_bytes"]
+                                   and ag_wire == model["ag_wire_bytes"]),
+            "valid_matches_model": (
+                abs(rs_valid - model["rs_valid_bytes"]) < 1e-6
+                and abs(ag_valid - model["ag_valid_bytes"]) < 1e-6),
+            "overlap_by_kind": st.overlap_by_kind(),
+            "plan_rs": hlo_walk.plan_agreement(st, ZERO_TRAIN_PLAN_INTENT,
+                                               kind="reduce-scatter"),
+            "plan_ag": hlo_walk.plan_agreement(st, ZERO_TRAIN_PLAN_INTENT,
+                                               kind="all-gather"),
+        }
+
+    out: dict = {"arch": arch, "ranks": ranks, "seq": seq, "batch": batch,
+                 "bucket_kb": bucket_kb, "compress": compress,
+                 "microbatches": microbatches}
+    out["bucketed"] = lower(bucket_kb << 10, True)
+    out["blocking"] = lower(bucket_kb << 10, False)
+    # one bucket holding the whole model: no sibling buckets to hide behind
+    out["single_bucket"] = lower(1 << 40, True)
+    if verbose:
+        print(json.dumps(out, indent=1))
+    return out
+
+
 def _mem_dict(mem):
     if mem is None:
         return {}
@@ -620,6 +737,21 @@ def plan_report(path: str, verbose: bool = True) -> int:
         # walker sees the reductions when nothing hides them
         "negative_control_serialized": serve["single"]["serialized"],
     })
+    for compress in ("none", "int8"):
+        train = train_dryrun(compress=compress, verbose=False)
+        for leg, plan_key in (("reduce_scatter", "plan_rs"),
+                              ("all_gather", "plan_ag")):
+            rows.append({
+                "program": f"zero_train_{compress}_{leg}",
+                "variant": "bucketed",
+                **train["bucketed"][plan_key],
+                "exposed_bytes": train["bucketed"]["exposed_bytes"],
+                "overlap_by_kind": train["bucketed"]["overlap_by_kind"],
+                # whole model in one bucket = no sibling norm/update math:
+                # its reduce-scatter must land on the chain there
+                "negative_control_serialized":
+                    train["single_bucket"]["serialized_rs"],
+            })
     disagreements = [r for r in rows if not r["agree"]]
     report = {
         "plans": rows,
@@ -706,6 +838,23 @@ def main() -> None:
                     help="routing profile for --moe: balanced counts, skewed "
                          "(all tokens to rank 0's experts, zero-token "
                          "experts elsewhere), or both")
+    ap.add_argument("--train", action="store_true",
+                    help="explicit ZeRO-2 train-step dry run: lower one "
+                         "bucketed fwd+bwd+AdamW step and assert 0 "
+                         "serialized reduce-scatter/all-gather collectives "
+                         "in the backward, kind-scoped plan/HLO agreement, "
+                         "and walker wire/valid bytes == the analytic ZeRO "
+                         "comm model; the whole-model single bucket is the "
+                         "serialized negative control")
+    ap.add_argument("--train-grid", type=int, default=8,
+                    help="data-parallel ranks for --train")
+    ap.add_argument("--train-bucket-kb", type=int, default=64,
+                    help="gradient bucket threshold (KiB) for --train")
+    ap.add_argument("--train-compress", default="none",
+                    choices=["none", "int8"],
+                    help="gradient compression for --train: int8 quantizes "
+                         "each reduced bucket shard (error feedback); the "
+                         "overlap verdict and byte model must not change")
     ap.add_argument("--attn-impl", default=None, choices=["jnp", "interpret"],
                     help="attention kernel impl for the --sp-ring/--serve "
                          "gates: 'interpret' traces the Pallas kernels "
@@ -769,6 +918,27 @@ def main() -> None:
         # negative control: the unstaggered schedule must show the reductions
         # on the chain, or the gate is measuring walker blindness
         bad += 0 if rep["single"]["serialized"] > 0 else 1
+        raise SystemExit(1 if bad else 0)
+
+    if args.train:
+        rep = train_dryrun(ranks=args.train_grid,
+                           bucket_kb=args.train_bucket_kb,
+                           compress=args.train_compress)
+        bad = 0
+        for v in ("bucketed", "blocking"):
+            # byte accounting must match the analytic ZeRO model in both
+            # interpretations (same buckets -> same wire)
+            bad += 0 if rep[v]["wire_matches_model"] else 1
+            bad += 0 if rep[v]["valid_matches_model"] else 1
+        bk = rep["bucketed"]
+        # the tentpole gate: nothing on the grad reduce / param prefetch
+        # legs may sit on the compute chain
+        bad += bk["serialized_rs"] + bk["serialized_ag"]
+        bad += 0 if bk["plan_rs"]["agree"] else 1
+        bad += 0 if bk["plan_ag"]["agree"] else 1
+        # negative control: one whole-model bucket must serialize its
+        # reduce-scatter, or the gate is measuring walker blindness
+        bad += 0 if rep["single_bucket"]["serialized_rs"] > 0 else 1
         raise SystemExit(1 if bad else 0)
 
     if args.moe:

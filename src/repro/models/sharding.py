@@ -54,7 +54,7 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["Recipe", "make_recipe", "use_recipe", "shard_act", "current_recipe",
-           "ragged_seq_extents", "ragged_expert_extents"]
+           "ragged_seq_extents", "ragged_expert_extents", "ragged_grad_extents"]
 
 
 def ragged_seq_extents(S: int, R: int) -> tuple[int, tuple[int, ...]]:
@@ -87,6 +87,22 @@ def ragged_expert_extents(E: int, R: int) -> tuple[int, tuple[int, ...]]:
     destination rank sum the token counts of exactly these experts.
     """
     return ragged_seq_extents(E, R)
+
+
+def ragged_grad_extents(n: int, R: int) -> tuple[int, tuple[int, ...]]:
+    """Ragged 1/R shards of a flattened gradient bucket: ``(cap, extents)``.
+
+    Contiguous ceil-split of the ``n``-element flat buffer a ZeRO-style
+    train step reduce-scatters over the ``data`` axis: rank ``r`` owns
+    elements ``[r*cap, min((r+1)*cap, n))`` of the reduced gradient (and the
+    matching optimizer-state shard), the bucket pads to ``R*cap`` on the
+    wire, and the extents are the ``MPI_Reduce_scatter`` ``recvcounts``
+    table (``repro.core.collectives.shard_reduce_scatterv_start``).  ``n``
+    need NOT divide the axis — trailing ranks update short (possibly empty)
+    shards, exactly the seq/expert ragged-split picture applied to the
+    flattened param space.
+    """
+    return ragged_seq_extents(n, R)
 
 # priority for param-dim conflicts (earlier wins a contested mesh axis)
 PRIORITY = ["e", "v", "f", "h", "a", "i", "c", "g", "q", "k", "m", "l"]

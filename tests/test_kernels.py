@@ -358,3 +358,56 @@ def test_flash_decode_bf16_cache():
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(expect, np.float32),
                                rtol=3e-2, atol=3e-2)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_carry_custom_vjp_grad_parity(causal):
+    """The carry kernel's custom VJP (satellite of the ZeRO train PR): sp_ring
+    training takes the Pallas forward, and its gradients — via the jnp-oracle
+    recompute backward — must match differentiating the reference merge
+    directly, including int offsets as traced operands (float0 cotangents)."""
+    import jax
+
+    B, Hq, Hkv, S, D = 1, 4, 2, 64, 16
+    q = jnp.asarray(RNG.standard_normal((B, Hq, S, D)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, Hkv, S, D)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, Hkv, S, D)), jnp.float32)
+
+    def norm(carry):
+        acc, m, l = carry
+        l = jnp.where(l == 0.0, 1.0, l)
+        return acc / l[..., None]
+
+    def loss_kernel(q, k, v):
+        c = ops.flash_attention_carry(
+            q, k, v, None, q_offset=jnp.int32(0), k_offset=jnp.int32(0),
+            causal=causal, impl="interpret", bq=32, bk=32)
+        return jnp.sum(jnp.square(norm(c)))
+
+    def loss_ref(q, k, v):
+        c = ref.flash_carry_ref(q, k, v, None, q_offset=0, k_offset=0,
+                                causal=causal)
+        return jnp.sum(jnp.square(norm(c)))
+
+    g_kern = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b, name in zip(g_kern, g_ref, "qkv"):
+        d = float(jnp.max(jnp.abs(a - b)))
+        assert d < 5e-5, (name, d)
+
+    # two chained ring steps: grads flow through the threaded carry state
+    Sl = S // 2
+
+    def loss_chain(q, k, v):
+        c = None
+        for t in range(2):
+            c = ops.flash_attention_carry(
+                q, k[:, :, t * Sl:(t + 1) * Sl], v[:, :, t * Sl:(t + 1) * Sl],
+                c, q_offset=jnp.int32(0), k_offset=jnp.int32(t * Sl),
+                causal=causal, impl="interpret", bq=32, bk=32)
+        return jnp.sum(jnp.square(norm(c)))
+
+    g_chain = jax.grad(loss_chain, argnums=(0, 1, 2))(q, k, v)
+    for a, b, name in zip(g_chain, g_ref, "qkv"):
+        d = float(jnp.max(jnp.abs(a - b)))
+        assert d < 5e-5, (name, d)

@@ -75,3 +75,61 @@ def test_error_feedback_residual_tracked():
     _, new_state, _ = apply_updates(params, grads, state, ocfg)
     # residual holds what quantization lost (nonzero somewhere)
     assert float(jnp.max(jnp.abs(new_state.err["w"]))) > 0.0
+
+
+def test_adamw_leaf_update_matches_apply_updates_bitwise():
+    """The ZeRO step reuses adamw_leaf_update per bucket shard; driving it
+    by hand with apply_updates' own scale/lr/bias-corrections must
+    reproduce apply_updates bit for bit — the two schedules share ONE
+    source of update math."""
+    from repro.train.optimizer import adamw_leaf_update
+
+    ocfg = OptConfig(lr=1e-2, warmup_steps=2, total_steps=50)
+    rng = np.random.default_rng(3)
+    params = {"w": jnp.asarray(rng.standard_normal((5, 3)), jnp.float32),
+              "b": jnp.asarray(rng.standard_normal((7,)), jnp.float32)}
+    grads = jax.tree.map(lambda p: jnp.asarray(
+        rng.standard_normal(p.shape), jnp.float32), params)
+    state = init_opt_state(params, ocfg)
+
+    new_p, new_s, metrics = apply_updates(params, grads, state, ocfg)
+
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, ocfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    lr = lr_at_step(step, ocfg)
+    b1c = 1 - ocfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - ocfg.b2 ** step.astype(jnp.float32)
+    for k in params:
+        p2, mu2, nu2 = adamw_leaf_update(
+            params[k], grads[k], state.mu[k], state.nu[k],
+            scale=scale, lr=lr, b1c=b1c, b2c=b2c, ocfg=ocfg)
+        np.testing.assert_array_equal(np.asarray(p2), np.asarray(new_p[k]))
+        np.testing.assert_array_equal(np.asarray(mu2), np.asarray(new_s.mu[k]))
+        np.testing.assert_array_equal(np.asarray(nu2), np.asarray(new_s.nu[k]))
+    assert float(metrics["grad_norm"]) == float(gnorm)
+
+
+def test_init_zero_opt_state_shapes():
+    """ZeRO optimizer state is per-bucket flat (padded,) f32 moments —
+    1/R of it lives on each rank once sharded — and the error-feedback
+    residual tuple exists only under int8 compression."""
+    from repro.train.buckets import assign_buckets
+    from repro.train.optimizer import init_zero_opt_state
+
+    params = {"a": jnp.zeros((10, 3), jnp.float32),
+              "b": jnp.zeros((17,), jnp.float32)}
+    buckets = assign_buckets(params, bucket_bytes=64, ranks=4)
+    assert len(buckets) > 1
+
+    st = init_zero_opt_state(params, buckets, OptConfig())
+    assert int(st.step) == 0 and st.err == ()
+    assert len(st.mu) == len(st.nu) == len(buckets)
+    for m, n, b in zip(st.mu, st.nu, buckets):
+        assert m.shape == n.shape == (b.padded,)
+        assert m.dtype == n.dtype == jnp.float32
+        assert b.padded % 4 == 0  # rank-divisible by construction
+
+    st8 = init_zero_opt_state(params, buckets, OptConfig(compress="int8"))
+    assert len(st8.err) == len(buckets)
+    assert all(e.shape == (b.padded,) for e, b in zip(st8.err, buckets))

@@ -242,3 +242,85 @@ def test_stagger_executor_round_robin_issue_wait_placement():
     assert order_bl == [("comp", 0), ("xfer", 0), ("wait", 0),
                         ("comp", 1), ("xfer", 1), ("wait", 1),
                         ("comp", 2), ("xfer", 2), ("wait", 2)]
+
+
+def test_bucket_plan_intent_and_validation():
+    from repro.core.plan import CommPlan, bucket, intent_of
+
+    assert intent_of("bucket") == "overlapped"
+    xfer = lambda s, k: None
+    comp = lambda g, a, k: a
+    comb = lambda r, k: None
+    red = lambda arrived: None
+    assert bucket(3, transfer=xfer, reduce=red, compute=comp,
+                  combine=comb).intent == "overlapped"
+    # a bucket plan without its all-gather return leg is a declaration bug
+    with pytest.raises(ValueError, match="bucket plan needs a combine stage"):
+        CommPlan("bucket", 2, xfer, comp, reduce=red)
+    # the cross-step reduce barrier only exists in the bucket schedule
+    with pytest.raises(ValueError, match="reduce stage is bucket-plan only"):
+        CommPlan("stagger", 2, xfer, comp, reduce=red)
+
+
+def test_bucket_executor_issue_wait_placement_and_identity():
+    """The ZeRO bucket schedule: double-buffered puts EVERY bucket's
+    reduce-scatter in flight before any wait, runs the single cross-bucket
+    reduce barrier, then per-bucket compute, then issues every all-gather
+    before waiting; blocking starts+waits each leg back-to-back through the
+    same issue path.  The folded values are identical — the waits are pure
+    completion points."""
+    from repro.core import Pending
+    from repro.core.plan import bucket
+
+    trace: list = []
+
+    def traced(value, tag, s):
+        class Traced(Pending):
+            def wait(self2):
+                trace.append((tag, s))
+                return Pending.wait(self2)
+
+        return Traced(value)
+
+    def transfer(state, s):
+        trace.append(("xfer", s))
+        return traced(s + 1, "xwait", s)
+
+    def reduce(arrived):
+        trace.append(("reduce",))
+        return sum(int(a) for a in arrived)  # sees every bucket's shard
+
+    def compute(gval, arrived_s, s):
+        trace.append(("comp", s))
+        return 100 * gval + int(arrived_s)
+
+    def combine(result, s):
+        trace.append(("cissue", s))
+        return traced(result, "cwait", s)
+
+    plan = bucket(3, transfer=transfer, reduce=reduce, compute=compute,
+                  combine=combine)
+    done_db = plan.run(None, None)
+    order_db = list(trace)
+    trace.clear()
+    done_bl = plan.run(None, None, double_buffer=False)
+    order_bl = list(trace)
+
+    # arrived = [1, 2, 3] -> gval = 6 -> results [601, 602, 603], both modes
+    assert [int(d) for d in done_db] == [601, 602, 603] == [int(d) for d in done_bl]
+    assert order_db == [
+        ("xfer", 0), ("xfer", 1), ("xfer", 2),          # whole backward in flight
+        ("xwait", 0), ("xwait", 1), ("xwait", 2),
+        ("reduce",),                                     # one cross-bucket barrier
+        ("comp", 0), ("comp", 1), ("comp", 2),
+        ("cissue", 0), ("cissue", 1), ("cissue", 2),     # all prefetches issued
+        ("cwait", 0), ("cwait", 1), ("cwait", 2),
+    ]
+    assert order_bl == [
+        ("xfer", 0), ("xwait", 0), ("xfer", 1), ("xwait", 1),
+        ("xfer", 2), ("xwait", 2),
+        ("reduce",),
+        ("comp", 0), ("cissue", 0), ("cwait", 0),
+        ("comp", 1), ("cissue", 1), ("cwait", 1),
+        ("comp", 2), ("cissue", 2), ("cwait", 2),
+    ]
